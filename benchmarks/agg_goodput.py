@@ -1,0 +1,82 @@
+"""Table 5 analogue: basic INC function microbenchmarks.
+
+SyncAgtr / AsyncAgtr goodput over the host-device data plane (8 devices,
+2 DP ranks x 4 TP — wall time on one CPU core is NOT TPU-representative;
+the derived column also reports modeled wire bytes, the
+hardware-independent quantity the roofline consumes). Voting and Monitor
+delays come from the host-level CntFwd / INC-map paths.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks._util import host_mesh, timeit
+from repro.core import inc_agg
+from repro.core.agreement import CntFwd
+from repro.core.inc_agg import IncAggConfig
+from repro.core.inc_map import ServerAgent, SwitchMemory
+
+L = 1 << 20      # 1M fp32 elements per rank
+
+
+def _allreduce_fn(mesh, mode):
+    cfg = IncAggConfig(mode=mode, precision=8)
+    manual = ("data",)
+
+    def body(g):
+        out, _ = inc_agg.all_reduce(g, manual, cfg)
+        return out
+
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(),
+                                 out_specs=P(), axis_names={"data"},
+                                 check_vma=False))
+
+
+def run():
+    rows = []
+    mesh = host_mesh(model=2)
+    n_dp = mesh.shape["data"]
+    g = jnp.asarray(np.random.RandomState(0).randn(L).astype(np.float32))
+    for mode in ("xla-psum", "fp32-ring", "netrpc", "netrpc-opt"):
+        f = _allreduce_fn(mesh, mode)
+        us = timeit(f, g)
+        bytes_moved = {"xla-psum": 2 * 4 * L * (n_dp - 1) / n_dp,
+                       "fp32-ring": 2 * 4 * L * (n_dp - 1) / n_dp,
+                       "netrpc": (2 * 4 + 2 * 4) * L * (n_dp - 1) / n_dp,
+                       "netrpc-opt": 2 * 2 * L * (n_dp - 1) / n_dp}[mode]
+        rows.append((f"t5/syncagtr_allreduce/{mode}", round(us, 1),
+                     f"wire_bytes_per_rank={bytes_moved:.0f}"))
+
+    # AsyncAgtr: keyed sparse aggregation through the INC map
+    srv = ServerAgent(SwitchMemory(4, 4096), gaid=1, n_slots=8192)
+    rng = np.random.RandomState(1)
+    keys = rng.zipf(1.3, 4096).astype(np.uint32) % 8192
+    vals = rng.randint(1, 100, 4096)
+    import time as _t
+    t0 = _t.perf_counter()
+    for _ in range(8):
+        srv.addto_batch(keys, vals)
+    us = (_t.perf_counter() - t0) / 8 * 1e6
+    rows.append(("t5/asyncagtr_addto_batch4096", round(us, 1),
+                 f"chr={srv.cache_hit_ratio:.3f}"))
+
+    # Voting delay (CntFwd, sub-RTT switch path)
+    cf = CntFwd(server=ServerAgent(SwitchMemory(1, 512), 2, 256),
+                threshold=3)
+    t0 = _t.perf_counter()
+    n = 300
+    for i in range(n):
+        cf.offer(i % 50)
+    us = (_t.perf_counter() - t0) / n * 1e6
+    rows.append(("t5/voting_delay", round(us, 1), "per_offer"))
+
+    # Monitor delay (KeyValue read path)
+    t0 = _t.perf_counter()
+    for i in range(200):
+        srv.read(int(keys[i]))
+    us = (_t.perf_counter() - t0) / 200 * 1e6
+    rows.append(("t5/monitor_read_delay", round(us, 1), "per_read"))
+    return rows

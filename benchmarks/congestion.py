@@ -1,0 +1,59 @@
+"""Figures 8-9 analogue: ECN-AIMD congestion control — fairness of two
+concurrent flows sharing one switch queue, and packet-loss reduction with
+the controller on vs off."""
+from __future__ import annotations
+
+import random
+
+from repro.core.transport import (AimdState, ClientFlow, FlipBitSwitch,
+                                  LossyLink, flip_of)
+
+
+def two_flows(n_packets=2000, ecn_on=True, seed=0):
+    sw = FlipBitSwitch(w_max=64, queue_capacity=48, ecn_threshold=32)
+    flows = [ClientFlow(i, n_packets, w_max=64,
+                        rng=random.Random(seed + i)) for i in range(2)]
+    if not ecn_on:
+        for f in flows:
+            f.aimd = AimdState(cw=64, additive=0, multiplicative=1.0,
+                               cw_max=64)      # fixed max window
+    drops = 0
+    rounds = 0
+    done_at = [None, None]
+    while not all(f.done for f in flows):
+        rounds += 1
+        for f in flows:
+            if f.done:
+                continue
+            batch = f.sendable() or f.retransmissions()
+            for pkt in batch:
+                # tail drop when the shared queue is full
+                if sw.queue_len >= sw.queue_capacity:
+                    drops += 1
+                    continue
+                sw.ingress(pkt)
+                f.on_ack(pkt.seq, pkt.ecn)
+        sw.drain(56)      # shared service rate
+        if rounds > 200000:
+            break
+    for i, f in enumerate(flows):
+        done_at[i] = f.sent_total + f.retx_total
+    return drops, rounds, [f.aimd.cw for f in flows], done_at
+
+
+def run():
+    rows = []
+    d_on, r_on, cws, sent_on = two_flows(ecn_on=True)
+    d_off, r_off, _, sent_off = two_flows(ecn_on=False)
+    total_on = sum(sent_on)
+    fairness = min(sent_on) / max(sent_on)
+    rows.append(("f8/fairness_jain_min_over_max", 0, round(fairness, 3)))
+    rows.append(("f8/final_cw_flow0", 0, cws[0]))
+    rows.append(("f8/final_cw_flow1", 0, cws[1]))
+    loss_on = d_on / max(total_on + d_on, 1)
+    loss_off = d_off / max(sum(sent_off) + d_off, 1)
+    rows.append(("f9/loss_rate_ecn_on", 0, round(loss_on, 4)))
+    rows.append(("f9/loss_rate_ecn_off", 0, round(loss_off, 4)))
+    red = 1 - loss_on / max(loss_off, 1e-9)
+    rows.append(("f9/loss_reduction_pct", 0, round(100 * red, 1)))
+    return rows

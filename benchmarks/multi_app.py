@@ -1,0 +1,93 @@
+"""Table 7 analogue: concurrent applications on one shared data plane.
+
+1APP / 4APP / 4APPx5: SyncAgtr + AsyncAgtr goodput and KeyValue/Agreement
+latency as the number of co-resident channels grows. The claim to
+reproduce: bandwidth-heavy apps keep their combined goodput; small apps'
+latency rises only mildly.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.agreement import CntFwd
+from repro.core.channel import Controller
+from repro.core.netfilter import NetFilter
+
+
+def mk_apps(controller, n_per_type, tag):
+    apps = {"sync": [], "async": [], "kv": [], "agree": []}
+    for i in range(n_per_type):
+        s = controller.register(NetFilter.from_dict(
+            {"AppName": f"sync-{tag}-{i}", "addTo": "R.t", "get": "Y.t",
+             "clear": "copy"}), n_slots=4096)
+        a = controller.register(NetFilter.from_dict(
+            {"AppName": f"async-{tag}-{i}", "addTo": "R.kvs"}),
+            n_slots=4096)
+        k = controller.register(NetFilter.from_dict(
+            {"AppName": f"kv-{tag}-{i}", "get": "Y.kvs"}), n_slots=2048)
+        g = controller.register(NetFilter.from_dict(
+            {"AppName": f"agree-{tag}-{i}",
+             "CntFwd": {"to": "SRC", "threshold": 2, "key": "b"}}),
+            n_slots=256)
+        apps["sync"].append(s)
+        apps["async"].append(a)
+        apps["kv"].append(k)
+        apps["agree"].append(g)
+    return apps
+
+
+def drive(apps, n_rounds=40):
+    rng = np.random.RandomState(0)
+    t_sync = t_async = 0.0
+    bytes_sync = bytes_async = 0
+    lat_kv = []
+    lat_ag = []
+    for r in range(n_rounds):
+        for ch in apps["sync"]:
+            k = np.arange(256, dtype=np.uint32)
+            v = rng.randint(1, 50, 256)
+            t0 = time.perf_counter()
+            ch.server.addto_batch(k, v)
+            t_sync += time.perf_counter() - t0
+            bytes_sync += 256 * 8
+        for ch in apps["async"]:
+            k = (rng.zipf(1.3, 256) % 4096).astype(np.uint32)
+            v = rng.randint(1, 50, 256)
+            t0 = time.perf_counter()
+            ch.server.addto_batch(k, v)
+            t_async += time.perf_counter() - t0
+            bytes_async += 256 * 8
+        for ch in apps["kv"]:
+            t0 = time.perf_counter()
+            ch.server.read(rng.randint(0, 2048))
+            lat_kv.append(time.perf_counter() - t0)
+        for ch in apps["agree"]:
+            cf = CntFwd(server=ch.server, threshold=2)
+            t0 = time.perf_counter()
+            cf.offer(r)
+            lat_ag.append(time.perf_counter() - t0)
+    return (bytes_sync / max(t_sync, 1e-9), bytes_async / max(t_async, 1e-9),
+            np.mean(lat_kv) * 1e6 if lat_kv else 0.0,
+            np.mean(lat_ag) * 1e6 if lat_ag else 0.0)
+
+
+def run():
+    rows = []
+    for label, n in (("1app", 1), ("4app", 1), ("4appx5", 5)):
+        c = Controller(Controller().switch.__class__(64, 40_000))
+        apps = mk_apps(c, n, label)
+        if label == "1app":      # only the sync app active
+            apps = {"sync": apps["sync"], "async": [], "kv": [],
+                    "agree": []}
+        gs, ga, lkv, lag = drive(apps)
+        rows.append((f"t7/{label}/sync_goodput_MBps", 0,
+                     round(gs / 1e6, 2)))
+        rows.append((f"t7/{label}/async_goodput_MBps", 0,
+                     round(ga / 1e6, 2)))
+        rows.append((f"t7/{label}/kv_delay_us", round(lkv, 1),
+                     "-" if lkv == 0 else ""))
+        rows.append((f"t7/{label}/agree_delay_us", round(lag, 1),
+                     "-" if lag == 0 else ""))
+    return rows

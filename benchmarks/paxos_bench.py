@@ -1,0 +1,74 @@
+"""Figure 7 analogue: Paxos throughput and p99 commit latency.
+
+INC variant (CntFwd counts votes, learners see only majority commits) vs a
+pure-software baseline where every accept travels to the learner process
+(the libpaxos analogue).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.netfilter import NetFilter
+from repro.core.rpc import Field, NetRPC, Service
+
+N_PROPOSALS = 150
+MAJORITY = 2
+N_ACCEPTORS = 3
+
+
+def _service(inc: bool) -> Service:
+    svc = Service("Paxos")
+    cnt = ({"to": "ALL", "threshold": MAJORITY, "key": "kvs"} if inc
+           else {"to": "SRC", "threshold": 0, "key": "NULL"})
+    svc.rpc("Accept", [Field("kvs", "STRINTMap")], [Field("msg")],
+            NetFilter.from_dict({"AppName": f"paxos-{inc}", "CntFwd": cnt}))
+    return svc
+
+
+def _drive(inc: bool):
+    svc = _service(inc)
+    rt = NetRPC()
+    learned = []
+    if inc:
+        rt.server.register("Accept",
+                           lambda req: learned.append(1) or {"msg": "ok"})
+    else:
+        # software learner counts votes itself
+        votes: dict = {}
+
+        def handler(req):
+            # passthrough fields only; count per call
+            votes["n"] = votes.get("n", 0) + 1
+            if votes["n"] % N_ACCEPTORS >= MAJORITY or \
+                    votes["n"] % N_ACCEPTORS == 0:
+                learned.append(1)
+            return {"msg": "ok"}
+        rt.server.register("Accept", handler)
+    acceptors = [rt.make_stub(svc) for _ in range(N_ACCEPTORS)]
+    lats = []
+    t0 = time.time()
+    for b in range(N_PROPOSALS):
+        t1 = time.perf_counter()
+        for a in acceptors:
+            a.call("Accept", {"kvs": {f"b{b}": 1}})
+        lats.append(time.perf_counter() - t1)
+    dt = time.time() - t0
+    return N_PROPOSALS / dt, np.percentile(lats, 99) * 1e6, \
+        rt.server.calls_seen
+
+
+def run():
+    rows = []
+    thr_inc, p99_inc, seen_inc = _drive(inc=True)
+    thr_sw, p99_sw, seen_sw = _drive(inc=False)
+    rows.append(("f7/inc/throughput_per_s", round(1e6 / thr_inc, 1),
+                 round(thr_inc, 1)))
+    rows.append(("f7/inc/p99_us", round(p99_inc, 1),
+                 f"server_msgs={seen_inc}"))
+    rows.append(("f7/software/throughput_per_s", round(1e6 / thr_sw, 1),
+                 round(thr_sw, 1)))
+    rows.append(("f7/software/p99_us", round(p99_sw, 1),
+                 f"server_msgs={seen_sw}"))
+    return rows

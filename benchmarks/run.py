@@ -1,0 +1,68 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name ...]
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract and
+writes benchmarks/results.csv. Benchmarks that exercise multi-flow INC
+behavior (goodput, fairness, train speed) run over 8 forced host devices —
+set here, at the single explicit entry point, never globally.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import argparse
+import csv
+import importlib
+import sys
+import time
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+MODULES = [
+    "loc_table",          # Table 4
+    "agg_goodput",        # Table 5
+    "train_speed",        # Figure 6
+    "paxos_bench",        # Figure 7
+    "congestion",         # Figures 8-9
+    "loss_robustness",    # Figure 10
+    "overflow_sweep",     # Figure 11
+    "cache_policies",     # Figure 12
+    "multiswitch",        # Figure 13
+    "clear_policies",     # Table 6
+    "multi_app",          # Table 7
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    mods = args.only or MODULES
+    rows = [("name", "us_per_call", "derived")]
+    failed = []
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            out = mod.run()
+            rows.extend(out)
+            print(f"# {name}: {len(out)} rows ({time.time() - t0:.1f}s)",
+                  file=sys.stderr)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    with open(Path(__file__).parent / "results.csv", "w", newline="") as f:
+        csv.writer(f).writerows(rows)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

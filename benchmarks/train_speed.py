@@ -1,0 +1,44 @@
+"""Figure 6 analogue: training speed per INC mode.
+
+xla-psum plays BytePS (pure software all-reduce); netrpc is the
+paper-faithful INC path; netrpc-opt the beyond-paper wire format. Reduced
+configs on host devices; the derived column also reports modeled per-rank
+wire bytes per step (the hardware-independent signal — on one CPU core the
+wall-clock ordering is not TPU-representative).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import host_mesh, timeit
+from repro.configs.base import ShapeConfig, get_arch
+from repro.core.inc_agg import IncAggConfig
+from repro.data import pipeline
+from repro.launch import steps
+from repro.models import api
+from repro.optim.adamw import AdamWConfig
+
+
+def run():
+    rows = []
+    mesh = host_mesh(model=2)
+    cfg = get_arch("qwen2.5-3b").reduced()
+    shape = ShapeConfig("b", seq_len=128, global_batch=8, kind="train")
+    n_params = api.count_params(cfg)
+    dcfg = pipeline.DataConfig(vocab=cfg.vocab, batch=8, seq_len=128,
+                               kind="uniform")
+    batch = pipeline.make_batch(dcfg, 0)
+    n_dp = mesh.shape["data"]
+    for mode in ("xla-psum", "fp32-ring", "netrpc", "netrpc-opt"):
+        prog = steps.build_train_step(
+            cfg, shape, mesh, inc=IncAggConfig(mode=mode, precision=8),
+            opt_cfg=AdamWConfig(), n_micro=1, donate=False)
+        params, opt = steps.init_state(prog, cfg)
+        us = timeit(lambda p, o, b: prog.fn(p, o, b, jnp.int32(1)),
+                    params, opt, batch, warmup=1, iters=3)
+        wire = {"xla-psum": 4, "fp32-ring": 4, "netrpc": 8,
+                "netrpc-opt": 2}[mode] * n_params * (n_dp - 1) / n_dp
+        rows.append((f"f6/train_step/{mode}", round(us, 1),
+                     f"steps_per_s={1e6 / us:.2f};wire_bytes={wire:.0f}"))
+    return rows

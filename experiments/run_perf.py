@@ -1,0 +1,89 @@
+"""§Perf hillclimb driver: re-lower the chosen cells with each optimization
+variant and record the roofline terms (experiments/perf/*.json).
+
+Cells (chosen per the assignment rubric from the baseline table):
+  phi4-mini-3.8b/train_4k/single  — WORST roofline fraction (0.35%):
+      24 heads don't divide TP=16, so attention compute+activations are
+      replicated 16x; memory-dominated by unfused attention.
+  grok-1-314b/decode_32k/multi    — MOST COLLECTIVE-BOUND: per-token FSDP
+      parameter gathers dwarf everything.
+  gemma3-27b/train_4k/single      — most representative of the paper's
+      SyncAgtr technique (largest dense zero1 model: the INC gradient
+      ring IS the step's collective path).
+  (bonus) grok-1-314b/train_4k/multi — the 314B FSDP+INC training cell.
+
+Variants are cumulative where meaningful; every row re-lowers and
+re-analyses (hypothesis -> change -> measure -> verdict in EXPERIMENTS.md).
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "perf"
+DRY = ROOT / "experiments" / "dryrun"
+
+CELLS = {
+    ("phi4-mini-3.8b", "train_4k", "single"): [
+        ("netrpc-opt", ["--inc-mode", "netrpc-opt"]),
+        ("netrpc-opt+flash", ["--inc-mode", "netrpc-opt", "--flash"]),
+        ("netrpc-opt+flash+pad32", ["--inc-mode", "netrpc-opt", "--flash",
+                                    "--pad-heads", "32", "--pad-kv", "16"]),
+    ],
+    ("gemma3-27b", "train_4k", "single"): [
+        ("netrpc-opt", ["--inc-mode", "netrpc-opt"]),
+        ("netrpc-opt+flash", ["--inc-mode", "netrpc-opt", "--flash"]),
+    ],
+    ("grok-1-314b", "decode_32k", "multi"): [
+        ("q8-gather", ["--qgather"]),
+    ],
+    ("grok-1-314b", "train_4k", "multi"): [
+        ("netrpc-opt", ["--inc-mode", "netrpc-opt"]),
+        ("netrpc-opt+flash", ["--inc-mode", "netrpc-opt", "--flash"]),
+        ("netrpc-opt+flash+micro4", ["--inc-mode", "netrpc-opt", "--flash",
+                                     "--n-micro", "4"]),
+    ],
+}
+
+
+def main():
+    OUT.mkdir(parents=True, exist_ok=True)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    for (arch, shape, mesh), variants in CELLS.items():
+        # variant 0 = the paper-faithful baseline from the main sweep
+        base = DRY / f"{arch}__{shape}__{mesh}__netrpc.json"
+        b = json.loads(base.read_text())
+        b["variant"] = "netrpc (paper-faithful)"
+        b["variant_order"] = 0
+        (OUT / f"{arch}__{shape}__{mesh}__v0.json").write_text(
+            json.dumps(b, indent=2))
+        for i, (name, flags) in enumerate(variants, start=1):
+            out = OUT / f"{arch}__{shape}__{mesh}__v{i}.json"
+            if out.exists() and json.loads(out.read_text()).get(
+                    "status") == "ok":
+                print(f"skip {arch} {shape} {mesh} {name} (cached)")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--json", str(out)] + flags
+            print(f"run {arch} {shape} {mesh} :: {name}", flush=True)
+            p = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                               timeout=3600)
+            if out.exists():
+                r = json.loads(out.read_text())
+                r["variant"] = name
+                r["variant_order"] = i
+                out.write_text(json.dumps(r, indent=2))
+                dom = max(r.get("compute_s", 0), r.get("memory_s", 0),
+                          r.get("collective_s", 0))
+                print(f"  -> {r['status']} dominant={r.get('dominant')} "
+                      f"{dom:.2f}s", flush=True)
+            else:
+                print("  -> FAILED\n", p.stderr[-1500:], flush=True)
+
+
+if __name__ == "__main__":
+    main()

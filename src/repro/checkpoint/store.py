@@ -1,0 +1,150 @@
+"""Checkpoint save/restore with exactly-once (step-parity) semantics.
+
+The paper's flip-bit idempotent retransmission (§5.1) re-appears at cluster
+scale as checkpoint/restart: a re-executed step must not double-apply. Each
+checkpoint carries (step, flip = step % 2); a restarted trainer compares the
+incoming step's flip against the persisted one — equal flip means the step's
+effects are already in the checkpoint (the "retransmission"), so the trainer
+skips re-applying and only replays data to advance its cursor.
+
+Layout (host-local; on a real cluster each host writes its process shards):
+  <dir>/step_<n>/manifest.json        {"step": n, "flip": n%2, ...}
+  <dir>/step_<n>/<tree>.npz           one npz per saved pytree
+Writes go to a tmp dir + atomic rename, so a crash mid-save never yields a
+readable-but-corrupt checkpoint. Saves run on a background thread (async
+checkpointing); `wait()` joins before the next save.
+
+Elastic resize: ZeRO state is saved per-leaf along its scatter dim, so
+restoring onto a different dp size = concatenate chunks and re-slice
+(resize_chunks), no re-initialization.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":     # npz can't round-trip ml_dtypes
+            arr = arr.astype(np.float32)     # (exact: f32 superset of bf16)
+        flat[key] = arr
+    return flat
+
+
+def _unflatten(tree_like, flat: dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(tree_like)[0]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    leaves = []
+    for path, like in paths:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = flat[key]
+        try:
+            arr = np.asarray(arr, dtype=like.dtype)
+        except ValueError:                   # e.g. -> bfloat16 via float32
+            arr = np.asarray(arr, np.float32).astype(like.dtype)
+        leaves.append(arr.reshape(like.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointStore:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # -- save -------------------------------------------------------------
+
+    def save(self, step: int, trees: dict, extra: dict | None = None,
+             async_: bool = True) -> None:
+        trees_np = {name: _flatten(t) for name, t in trees.items()}
+        manifest = {"step": int(step), "flip": int(step) % 2,
+                    **(extra or {})}
+        if async_:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, trees_np, manifest))
+            self._thread.start()
+        else:
+            self._write(step, trees_np, manifest)
+
+    def _write(self, step: int, trees_np: dict, manifest: dict) -> None:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        for name, flat in trees_np.items():
+            np.savez(tmp / f"{name}.npz", **flat)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                     # atomic commit
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.list_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------
+
+    def list_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def manifest(self, step: int) -> dict:
+        return json.loads(
+            (self.dir / f"step_{step:08d}" / "manifest.json").read_text())
+
+    def restore(self, step: int, trees_like: dict) -> dict:
+        d = self.dir / f"step_{step:08d}"
+        out = {}
+        for name, like in trees_like.items():
+            with np.load(d / f"{name}.npz") as z:
+                out[name] = _unflatten(like, dict(z))
+        return out
+
+    # -- exactly-once gate (the flip bit) ----------------------------------
+
+    def already_applied(self, step: int) -> bool:
+        """True iff `step`'s effects are already persisted — the incoming
+        step is a 'retransmission' and must be skipped (idempotence).
+        The flip bit cross-checks manifest integrity like the switch's
+        bit-equality test: a manifest whose flip mismatches its own step
+        is corrupt and treated as not applied."""
+        latest = self.latest_step()
+        if latest is None or step > latest:
+            return False
+        return self.manifest(latest)["flip"] == latest % 2
+
+
+def resize_chunks(chunks: list[np.ndarray], new_n: int, dim: int = 0
+                  ) -> list[np.ndarray]:
+    """Re-chunk ZeRO shards for a different dp size (elastic restore)."""
+    full = np.concatenate(chunks, axis=dim)
+    assert full.shape[dim] % new_n == 0, (full.shape, new_n)
+    return list(np.split(full, new_n, axis=dim))

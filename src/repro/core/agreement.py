@@ -1,0 +1,82 @@
+"""CntFwd: the counting/forwarding primitive (paper §4, §5.2.3).
+
+Two realizations:
+
+1. ON-DEVICE (inside shard_map): quorum counters via masked psum — "forward
+   when the counter reaches the threshold" becomes "commit the aggregated
+   step when >= threshold workers contributed". This is the framework's
+   straggler mitigation / elastic-quorum mechanism: a training step may
+   commit with a partial aggregation exactly like the paper's SyncAgtr
+   commit gate, instead of stalling on the slowest worker.
+
+2. HOST-LEVEL: counters in the INC map with threshold-gated forwarding —
+   test&set (threshold 1) gives distributed locks; per-key vote maps give
+   Paxos-style ballots (used by examples/paxos.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.inc_map import ServerAgent
+
+
+# -- on-device quorum (elastic SyncAgtr commit gate) -------------------------
+
+def quorum_count(contributed: jax.Array, dp_axes: tuple[str, ...]
+                 ) -> jax.Array:
+    """contributed: per-rank {0,1} scalar -> global count (CntFwd counter)."""
+    return jax.lax.psum(contributed.astype(jnp.int32), dp_axes)
+
+
+def quorum_commit(count: jax.Array, threshold: int) -> jax.Array:
+    """CntFwd gate: True once >= threshold ranks contributed."""
+    return count >= threshold
+
+
+def elastic_mean(x_sum: jax.Array, count: jax.Array) -> jax.Array:
+    """Normalize a partial-quorum SUM by the live contributor count."""
+    return x_sum / jnp.maximum(count.astype(x_sum.dtype), 1)
+
+
+# -- host-level CntFwd over the INC map ---------------------------------------
+
+@dataclass
+class CntFwd:
+    """Threshold counters over INC-map keys (switch-resident when mapped).
+
+    forward(key) semantics per Table 2:
+        cnt[key] += 1; if cnt[key] == threshold: deliver and (optionally)
+        clear; else drop.
+    """
+    server: ServerAgent
+    threshold: int
+    to: str = "ALL"
+    delivered: dict[int, int] = field(default_factory=dict)
+
+    def offer(self, key: int, votes: int = 1) -> bool:
+        """Count a vote; True iff the threshold is reached by this packet."""
+        self.server.addto_batch(np.array([key], np.uint32),
+                                np.array([votes], np.int64))
+        cnt = self.server.read(key)
+        if cnt >= self.threshold and key not in self.delivered:
+            self.delivered[key] = cnt
+            return True
+        return False
+
+    def test_and_set(self, key: int) -> bool:
+        """threshold=1 CntFwd == test&set: first caller wins (locks)."""
+        prev = self.server.read(key)
+        self.server.addto_batch(np.array([key], np.uint32),
+                                np.array([1], np.int64))
+        return prev == 0
+
+    def release(self, key: int) -> None:
+        cur = self.server.read(key)
+        if cur:
+            self.server.addto_batch(np.array([key], np.uint32),
+                                    np.array([-cur], np.int64))
+        self.delivered.pop(key, None)

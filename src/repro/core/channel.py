@@ -1,0 +1,133 @@
+"""Multi-application INC data plane (paper §3.2, §5.2.2).
+
+One switch program serves every application: apps register with the
+controller, get a GAID and a switch-memory partition (FCFS), and share the
+same set of RIPs — start/stop never reboots the data plane. Leaked
+partitions (host crash before release) are reclaimed by the two-level
+timeout: the controller polls per-GAID last-use timestamps; a stale app's
+INC map is first retrieved to its server agent (level 1), and after a
+longer period the saved items are delivered to the user stub or deleted
+(level 2).
+
+On TPU the analogue holds: channels are named INC streams (gradients,
+metrics, agreement, KV) sharing one mesh; registration reserves register-
+file partitions, and reclaim keeps long-running serving jobs from pinning
+device memory for dead clients.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable
+
+from repro.core.inc_map import ClientAgent, ServerAgent, SwitchMemory
+from repro.core.netfilter import NetFilter
+
+
+@dataclass
+class ChannelStats:
+    calls: int = 0
+    inc_bytes: int = 0
+    host_bytes: int = 0
+
+
+class Channel:
+    """One application's INC connection: NetFilter + agents + partition."""
+
+    def __init__(self, gaid: int, nf: NetFilter, server: ServerAgent,
+                 controller: "Controller"):
+        self.gaid = gaid
+        self.netfilter = nf
+        self.server = server
+        self.controller = controller
+        self.clients: list[ClientAgent] = []
+        self.stats = ChannelStats()
+        self.app_type = nf.app_type()
+
+    def client(self) -> ClientAgent:
+        c = ClientAgent(self.server)
+        self.clients.append(c)
+        return c
+
+    def touch(self) -> None:
+        self.controller.touch(self.gaid)
+
+    def close(self) -> None:
+        self.controller.release(self.gaid)
+
+
+class Controller:
+    """System-wide registration / name lookup / memory + timeout manager."""
+
+    def __init__(self, switch: SwitchMemory | None = None,
+                 t1: float = 60.0, t2: float = 600.0,
+                 clock: Callable[[], float] | None = None):
+        self.switch = switch or SwitchMemory()
+        self.t1 = t1            # first-level timeout: retrieve to server
+        self.t2 = t2            # second-level: deliver-or-delete
+        self._clock = clock or (lambda: 0.0)
+        self._now = 0.0
+        self._gaids = itertools.count(1)
+        self.channels: dict[int, Channel] = {}
+        self.by_name: dict[str, int] = {}
+        self.last_use: dict[int, float] = {}
+        self.retrieved: dict[int, float] = {}     # gaid -> level-1 time
+        self.delivered: dict[int, dict] = {}      # level-2 mailbox
+
+    def now(self) -> float:
+        return max(self._clock(), self._now)
+
+    def advance(self, dt: float) -> None:        # virtual clock for tests
+        self._now = self.now() + dt
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, nf: NetFilter, n_slots: int = 4096,
+                 cache_policy: str = "netrpc-lru") -> Channel:
+        if nf.app_name in self.by_name:
+            raise ValueError(f"app {nf.app_name!r} already registered")
+        gaid = next(self._gaids)
+        server = ServerAgent(self.switch, gaid, n_slots, policy=cache_policy)
+        ch = Channel(gaid, nf, server, self)
+        self.channels[gaid] = ch
+        self.by_name[nf.app_name] = gaid
+        self.last_use[gaid] = self.now()
+        return ch
+
+    def lookup(self, app_name: str) -> Channel:
+        return self.channels[self.by_name[app_name]]
+
+    def touch(self, gaid: int) -> None:
+        self.last_use[gaid] = self.now()
+        self.retrieved.pop(gaid, None)
+
+    def release(self, gaid: int) -> None:
+        ch = self.channels.pop(gaid, None)
+        if ch is None:
+            return
+        self.by_name.pop(ch.netfilter.app_name, None)
+        self.switch.release(gaid)
+        self.last_use.pop(gaid, None)
+        self.retrieved.pop(gaid, None)
+
+    # -- two-level timeout reclaim ------------------------------------------
+
+    def poll(self) -> list[tuple[int, int]]:
+        """Periodic controller poll. Returns [(gaid, level)] events."""
+        events = []
+        t = self.now()
+        for gaid, ch in list(self.channels.items()):
+            idle = t - self.last_use.get(gaid, t)
+            if gaid in self.retrieved:
+                if t - self.retrieved[gaid] >= self.t2 - self.t1:
+                    # level 2: deliver saved items to the stub (or drop) and
+                    # release the partition
+                    self.delivered[gaid] = dict(ch.server.spill)
+                    self.release(gaid)
+                    events.append((gaid, 2))
+            elif idle >= self.t1:
+                # level 1: retrieve the app's INC map into the server agent
+                ch.server.retrieve_all()
+                self.retrieved[gaid] = t
+                events.append((gaid, 1))
+        return events

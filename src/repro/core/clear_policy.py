@@ -1,0 +1,116 @@
+"""Map.clear policies: copy / shadow / lazy (paper §5.2.2, Table 6).
+
+The switch memory only supports addTo, not overwrite, so starting a new
+accumulation round requires get + clear + addTo — and a packet loss between
+get and clear would lose the value permanently. The paper offers three
+policies trading latency / memory / throughput; we implement them as
+accumulator state machines over device arrays so training's gradient
+accumulator, the examples, and the Table-6 benchmark all share them.
+
+Structural costs (reported by the benchmark in round-trip "hops" and memory
+multiplier, the dry-run analogue of Table 6):
+
+  copy    1x memory, extra forward of the full value to the server each
+          round (highest throughput on the switch, highest latency);
+  shadow  2x memory, alternating segments (lowest latency, halves the
+          usable register space);
+  lazy    1x memory, no clears at all: the host subtracts the previous
+          snapshot; overflow eventually forces a fallback reset.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import is_sentinel
+
+POLICIES = ("copy", "shadow", "lazy")
+
+
+@dataclass
+class ClearStats:
+    memory_multiplier: int
+    roundtrip_hops: int     # extra server round-trips per read cycle
+    fallback_resets: int = 0
+
+
+class CopyClear:
+    """Round value is copied to the server before the switch clears (§5.2.2.1).
+
+    No extra switch memory; the value travels to the server (one extra
+    "hop"), which keeps the backup in case the return packet is lost.
+    """
+
+    def __init__(self, n: int):
+        self.acc = jnp.zeros(n, jnp.int32)
+        self.server_backup = jnp.zeros(n, jnp.int32)
+        self.stats = ClearStats(memory_multiplier=1, roundtrip_hops=2)
+
+    def addto(self, q: jax.Array) -> None:
+        self.acc = ops.sat_add(self.acc, q)
+
+    def read_and_clear(self) -> jax.Array:
+        self.server_backup = self.acc          # copy to server first
+        out = self.server_backup
+        self.acc = jnp.zeros_like(self.acc)    # then clear the switch
+        return out
+
+
+class ShadowClear:
+    """Double-buffered segments: read one while the other accumulates."""
+
+    def __init__(self, n: int):
+        self.seg = [jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32)]
+        self.active = 0
+        self.stats = ClearStats(memory_multiplier=2, roundtrip_hops=1)
+
+    def addto(self, q: jax.Array) -> None:
+        self.seg[self.active] = ops.sat_add(self.seg[self.active], q)
+
+    def read_and_clear(self) -> jax.Array:
+        out = self.seg[self.active]
+        self.active ^= 1
+        self.seg[self.active] = jnp.zeros_like(out)  # clear the shadow
+        return out
+
+
+class LazyClear:
+    """Never clear: host subtracts the last snapshot (§5.2.2.3).
+
+    The switch keeps accumulating monotonically; overflow (sentinel) forces
+    a fallback reset, whose frequency is the policy's throughput cost
+    (Table 6 lazy 0%/1%/10% rows).
+    """
+
+    def __init__(self, n: int):
+        self.acc = jnp.zeros(n, jnp.int32)
+        self.snapshot = jnp.zeros(n, jnp.int32)
+        self.stats = ClearStats(memory_multiplier=1, roundtrip_hops=1)
+
+    def addto(self, q: jax.Array) -> None:
+        self.acc = ops.sat_add(self.acc, q)
+
+    def read_and_clear(self) -> jax.Array:
+        ovf = is_sentinel(self.acc)
+        delta = jnp.where(ovf, 0, self.acc - self.snapshot)
+        if bool(jnp.any(ovf)):
+            # overflow fallback: host recomputes; switch memory resets
+            self.stats.fallback_resets += 1
+            self.acc = jnp.zeros_like(self.acc)
+            self.snapshot = jnp.zeros_like(self.acc)
+        else:
+            self.snapshot = self.acc
+        return delta
+
+
+def make_clear_policy(policy: str, n: int):
+    if policy == "copy":
+        return CopyClear(n)
+    if policy == "shadow":
+        return ShadowClear(n)
+    if policy == "lazy":
+        return LazyClear(n)
+    raise ValueError(f"clear policy must be one of {POLICIES}, got {policy!r}")

@@ -1,0 +1,313 @@
+"""The INC map: keys -> 32-bit logical addresses -> switch physical registers.
+
+Paper §5.2.2. The RPCLayer sees an unlimited global map addressable by keys;
+the INCLayer realizes it with:
+
+  - client-side hashing of arbitrary keys into a 32-bit logical space,
+    collisions detected by the client and routed to the host path;
+  - a server-agent-owned logical->physical mapping (shared by all clients of
+    an app, handed out by piggybacking on ACKs);
+  - fixed-size on-switch register segments (here: device int32 arrays,
+    updated with the saturating sparse_addto kernel);
+  - cache replacement at the server agent (periodic-counting LRU — the
+    paper's policy — plus FCFS / HASH / PoN baselines of Fig. 12);
+  - host-side spill for unmapped keys (the fallback that makes the map
+    "unlimited").
+
+On TPU the "switch memory" is a VMEM-resident register file and this module
+is the host-side control plane that decides which logical addresses deserve
+a physical slot. The data-plane update itself (kernels/sparse_addto.py) runs
+on-device at line rate.
+"""
+from __future__ import annotations
+
+import zlib
+from collections import Counter, defaultdict
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+LOGICAL_BITS = 32
+CACHE_POLICIES = ("netrpc-lru", "fcfs", "hash", "pon")
+
+
+def hash_key(key: str | bytes | int) -> int:
+    """Stable 32-bit logical address for an arbitrary key."""
+    if isinstance(key, int):
+        return key & 0xFFFFFFFF
+    if isinstance(key, str):
+        key = key.encode()
+    return zlib.crc32(key) & 0xFFFFFFFF
+
+
+@dataclass
+class Segment:
+    """One switch register segment (paper: 40K 32-bit units per segment)."""
+    n_slots: int
+    regs: jnp.ndarray = None
+
+    def __post_init__(self):
+        if self.regs is None:
+            self.regs = jnp.zeros(self.n_slots, jnp.int32)
+
+
+class SwitchMemory:
+    """The device-resident register file, partitioned among applications.
+
+    Matches §6.1: 32 segments x 40K 32-bit units by default. Partitions are
+    reserved per GAID at registration (FCFS), actual slots allocated lazily.
+    """
+
+    def __init__(self, n_segments: int = 32, seg_slots: int = 40_000):
+        self.n_segments = n_segments
+        self.seg_slots = seg_slots
+        self.segments = [Segment(seg_slots) for _ in range(n_segments)]
+        self.partitions: dict[int, tuple[int, int]] = {}  # gaid -> (start, n)
+        self._next_free = 0
+
+    @property
+    def total_slots(self) -> int:
+        return self.n_segments * self.seg_slots
+
+    def reserve(self, gaid: int, n_slots: int) -> bool:
+        """FCFS partition reservation at app registration (§5.2.2)."""
+        if gaid in self.partitions:
+            return True
+        if self._next_free + n_slots > self.total_slots:
+            return False
+        self.partitions[gaid] = (self._next_free, n_slots)
+        self._next_free += n_slots
+        return True
+
+    def release(self, gaid: int) -> None:
+        # partitions are compacted lazily; released ranges are re-usable
+        # only at the tail (switch memory cannot be defragmented at runtime)
+        part = self.partitions.pop(gaid, None)
+        if part and part[0] + part[1] == self._next_free:
+            self._next_free = part[0]
+
+    def _locate(self, phys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        return phys // self.seg_slots, phys % self.seg_slots
+
+    def addto(self, phys: np.ndarray, vals: np.ndarray) -> None:
+        """Saturating scatter-add batches into the owning segments."""
+        seg_ix, off = self._locate(np.asarray(phys))
+        for s in np.unique(seg_ix):
+            m = seg_ix == s
+            seg = self.segments[int(s)]
+            seg.regs = ops.sparse_addto(seg.regs,
+                                        jnp.asarray(off[m], jnp.int32),
+                                        jnp.asarray(vals[m], jnp.int32))
+
+    def get(self, phys: np.ndarray) -> np.ndarray:
+        seg_ix, off = self._locate(np.asarray(phys))
+        out = np.zeros(len(phys), np.int32)
+        for s in np.unique(seg_ix):
+            m = seg_ix == s
+            out[m] = np.asarray(self.segments[int(s)].regs)[off[m]]
+        return out
+
+    def clear(self, phys: np.ndarray) -> None:
+        seg_ix, off = self._locate(np.asarray(phys))
+        for s in np.unique(seg_ix):
+            m = seg_ix == s
+            seg = self.segments[int(s)]
+            seg.regs = seg.regs.at[jnp.asarray(off[m])].set(0)
+
+
+class ServerAgent:
+    """Owns the logical->physical mapping for one application (§5.2.2).
+
+    Clients send unmapped keys to the server (host path); if switch memory
+    is available the agent piggybacks a mapping on the returning ACK. The
+    agent also runs the cache replacement policy over per-window client
+    usage counters.
+    """
+
+    def __init__(self, switch: SwitchMemory, gaid: int, n_slots: int,
+                 policy: str = "netrpc-lru", pon_threshold: int = 4,
+                 window: int = 1024):
+        assert policy in CACHE_POLICIES, policy
+        self.switch = switch
+        self.gaid = gaid
+        self.policy = policy
+        self.pon_threshold = pon_threshold
+        self.window = window
+        self.granted = switch.reserve(gaid, n_slots)
+        self.base, self.capacity = (switch.partitions.get(gaid, (0, 0)))
+        self.mapping: dict[int, int] = {}      # logical -> physical
+        self.free: list[int] = list(range(self.capacity - 1, -1, -1))
+        self.spill: dict[int, int] = defaultdict(int)   # host-side values
+        self.window_counts: Counter = Counter()
+        self.seen_this_window = 0
+        # metrics
+        self.hits = 0
+        self.misses = 0
+        self.inc_bytes = 0
+        self.host_bytes = 0
+
+    # -- data path ------------------------------------------------------
+
+    def addto_batch(self, logical: np.ndarray, vals: np.ndarray) -> None:
+        """Route a batch of (logical addr, value) updates: INC or host."""
+        logical = np.asarray(logical, np.uint32)
+        vals = np.asarray(vals, np.int64)
+        mapped = np.array([l in self.mapping for l in logical])
+        # INC path
+        if mapped.any():
+            phys = np.array([self.mapping[l] for l in logical[mapped]])
+            self.switch.addto(self.base + phys, vals[mapped].astype(np.int32))
+            self.hits += int(mapped.sum())
+            self.inc_bytes += int(mapped.sum()) * 8
+        # host path (miss): server agent software map + maybe grant mapping
+        for l, v in zip(logical[~mapped], vals[~mapped]):
+            self.spill[int(l)] += int(v)
+            self.misses += 1
+            self.host_bytes += 8
+            self._maybe_grant(int(l))
+        # usage accounting for the periodic LRU
+        self.window_counts.update(int(l) for l in logical)
+        self.seen_this_window += len(logical)
+        if self.seen_this_window >= self.window:
+            self.end_window()
+
+    def read(self, logical: int) -> int:
+        """Map.get: switch register (if mapped) + host spill."""
+        v = self.spill.get(int(logical), 0)
+        if int(logical) in self.mapping:
+            v += int(self.switch.get(
+                np.array([self.base + self.mapping[int(logical)]]))[0])
+        return v
+
+    def read_all(self) -> dict[int, int]:
+        out = dict(self.spill)
+        if self.mapping:
+            logs = list(self.mapping)
+            phys = self.base + np.array([self.mapping[l] for l in logs])
+            vals = self.switch.get(phys)
+            for l, v in zip(logs, vals):
+                out[l] = out.get(l, 0) + int(v)
+        return out
+
+    def clear_all(self) -> None:
+        if self.mapping:
+            phys = self.base + np.array(list(self.mapping.values()))
+            self.switch.clear(phys)
+        self.spill.clear()
+
+    # -- mapping policy ---------------------------------------------------
+
+    def _maybe_grant(self, logical: int) -> None:
+        if not self.granted or logical in self.mapping:
+            return
+        if self.policy == "hash":
+            slot = logical % self.capacity if self.capacity else 0
+            if self.capacity and slot not in self.mapping.values():
+                self._install(logical, slot)
+            return
+        if self.policy == "pon":
+            if self.window_counts[logical] + 1 < self.pon_threshold:
+                return
+            if self.free:
+                self._install(logical, self.free.pop())
+            return
+        # fcfs and netrpc-lru both grant while space lasts; they differ in
+        # eviction (fcfs never evicts; lru evicts at window end)
+        if self.free:
+            self._install(logical, self.free.pop())
+
+    def _install(self, logical: int, slot: int) -> None:
+        self.mapping[logical] = slot
+        # migrate the host-spilled partial value into the register
+        v = self.spill.pop(logical, 0)
+        if v:
+            self.switch.addto(np.array([self.base + slot]),
+                              np.array([v], np.int32))
+
+    def end_window(self) -> None:
+        """Periodic counting-based LRU (§5.2.2): clients report per-window
+        use counts; the agent evicts mapped keys colder than unmapped ones."""
+        if self.policy == "netrpc-lru" and self.capacity:
+            hot = [l for l, _ in self.window_counts.most_common(self.capacity)]
+            hot_set = set(hot)
+            evict = [l for l in self.mapping if l not in hot_set]
+            want = [l for l in hot if l not in self.mapping]
+            for l in evict:
+                if not want:
+                    break
+                slot = self.mapping.pop(l)
+                # retrieve the register value into the host map (no loss)
+                v = int(self.switch.get(np.array([self.base + slot]))[0])
+                if v:
+                    self.spill[l] += v
+                self.switch.clear(np.array([self.base + slot]))
+                self._install(want.pop(0), slot)
+        self.window_counts.clear()
+        self.seen_this_window = 0
+
+    def retrieve_all(self) -> None:
+        """Pull every mapped register value into the host-side map (the
+        level-1 timeout retrieval of §5.2.2, also used at graceful stop)."""
+        for logical, slot in list(self.mapping.items()):
+            v = int(self.switch.get(np.array([self.base + slot]))[0])
+            if v:
+                self.spill[logical] += v
+            self.switch.clear(np.array([self.base + slot]))
+        self.mapping.clear()
+        self.free = list(range(self.capacity - 1, -1, -1))
+
+    # -- metrics ----------------------------------------------------------
+
+    @property
+    def cache_hit_ratio(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0
+
+
+class ClientAgent:
+    """Client-side key hashing + collision detection (§5.2.2).
+
+    The client knows its own key set, so it can detect logical-address
+    collisions among them and route colliding keys via the host payload
+    path (bypassing INC) — handled here by tracking a canonical key per
+    logical address.
+    """
+
+    def __init__(self, server: ServerAgent):
+        self.server = server
+        self.key_of: dict[int, str | bytes | int] = {}
+        self.collisions: dict[str | bytes | int, int] = {}
+
+    def logical(self, key) -> int | None:
+        """Returns the logical address, or None if the key must bypass INC."""
+        if key in self.collisions:
+            return None
+        l = hash_key(key)
+        owner = self.key_of.setdefault(l, key)
+        if owner != key:
+            self.collisions[key] = l
+            return None
+        return l
+
+    def addto(self, kv: dict, precision: int = 0) -> None:
+        scale = 10 ** precision
+        logs, vals = [], []
+        for k, v in kv.items():
+            l = self.logical(k)
+            iv = int(round(v * scale))
+            if l is None:
+                self.server.spill[hash_key(k)] += iv  # host path
+                self.server.host_bytes += 8
+            else:
+                logs.append(l)
+                vals.append(iv)
+        if logs:
+            self.server.addto_batch(np.array(logs, np.uint32),
+                                    np.array(vals, np.int64))
+
+    def read(self, key, precision: int = 0) -> float:
+        l = hash_key(key)
+        return self.server.read(l) / (10 ** precision)

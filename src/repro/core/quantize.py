@@ -1,0 +1,55 @@
+"""Fixed-point quantization with overflow fallback (paper §5.2.1).
+
+The NetFilter `Precision` field gives the scaling factor 10**p. Values are
+quantized to int32 fixed point for in-network accumulation; overflow anywhere
+along the reduction surfaces as a sentinel, and the receiver re-computes
+exactly the overflowed lanes in fp32 ("server agent" software fallback) so
+the result is always correct — the paper's central reliability contract.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.constants import INT32_MAX, INT32_MIN  # noqa: F401 (re-export)
+
+
+def precision_scale(precision: int) -> jnp.ndarray:
+    return jnp.float32(10.0 ** precision)
+
+
+def quantize(x: jax.Array, precision: int) -> jax.Array:
+    """fp -> int32 fixed point at 10**precision (any shape)."""
+    shape = x.shape
+    q = ops.quantize(x.reshape(-1), precision_scale(precision))
+    return q.reshape(shape)
+
+
+def dequantize(q: jax.Array, precision: int) -> tuple[jax.Array, jax.Array]:
+    """int32 -> (fp32, overflow mask) at 10**precision (any shape)."""
+    shape = q.shape
+    x, m = ops.dequantize(q.reshape(-1), precision_scale(precision))
+    return x.reshape(shape), m.reshape(shape)
+
+
+def with_fallback(q_result: jax.Array, local_fp32: jax.Array, precision: int,
+                  fp32_reduce: Callable[[jax.Array], jax.Array],
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Dequantize an INC reduction result and repair overflowed lanes.
+
+    q_result:   int32 reduced values (sentinels mark overflow on some hop)
+    local_fp32: this rank's original fp32 contribution, same shape
+    fp32_reduce: the software-path reduction (e.g. psum over the DP axes) —
+        the "resend to the server agent" of §5.2.1.
+
+    Returns (fp32 result, overflow mask). Only overflowed lanes pay for the
+    fp32 re-reduction; the mask zeroes everything else so the re-reduction
+    moves (almost) no useful bytes on non-overflow steps but stays a fixed
+    part of the compiled program, matching the always-armed fallback path.
+    """
+    x, mask = dequantize(q_result, precision)
+    repaired = fp32_reduce(jnp.where(mask, local_fp32, 0.0))
+    return jnp.where(mask, repaired, x), mask

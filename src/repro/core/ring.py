@@ -1,0 +1,159 @@
+"""ICI ring collectives with per-hop INC semantics.
+
+This is the TPU realization of the NetRPC data plane: a ring reduce-scatter
+built from `jax.lax.ppermute`, where each hop performs the switch's
+`Map.addTo` (saturating int32 add with sticky overflow sentinels) on the
+in-flight chunk. Every ICI hop plays the role of one switch traversal; the
+chunk is the "packet"; the device-resident chunk is the "switch register
+segment".
+
+All functions MUST be called inside a `jax.shard_map` region where `axis` is
+a manual mesh axis. They operate on *pre-chunked* buffers: dim 0 is the
+chunk index (length = axis size, replicated w.r.t. any auto axes so the ring
+slicing stays device-local), remaining dims may carry auto (e.g. tensor
+parallel) shardings — ppermute and elementwise adds commute with them. This
+lets a single-level shard_map (manual over the data-parallel axes, auto over
+'model') run one independent ring per model shard: the aggregation work and
+wire bytes are divided n_model ways, the TPU analogue of NetRPC packing 32
+key-value pairs per packet across switch register groups.
+
+Ownership convention: after reduce_scatter over an axis of size n, rank j
+holds fully-reduced chunk j. all_gather inverts it.
+
+Algorithm (classic ring): n-1 hops for RS, n-1 for AG. Wire bytes per rank:
+2 * (n-1)/n * L * itemsize — roofline-optimal for a ring all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+AddFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def _ring_perm(n: int) -> list[tuple[int, int]]:
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+# -- pre-chunked primitives ---------------------------------------------------
+
+def reduce_scatter_chunked(buf: jax.Array, axis: str, add: AddFn) -> jax.Array:
+    """buf: (n, ...) chunk-indexed on dim 0 -> this rank's reduced chunk (...).
+
+    Rank j ends holding fully-reduced chunk j.
+    """
+    n = jax.lax.axis_size(axis)
+    j = jax.lax.axis_index(axis)
+    assert buf.shape[0] == n, (buf.shape, n)
+    perm = _ring_perm(n)
+
+    def body(s, acc):
+        # chunk this rank forwards at step s: index (j - s - 1) mod n
+        chunk = jax.lax.dynamic_index_in_dim(buf, (j - s - 1) % n, 0,
+                                             keepdims=False)
+        # add(0, chunk) == chunk for both fp add and saturating add (sticky
+        # sentinels propagate through), so step 0 needs no special case.
+        return jax.lax.ppermute(add(acc, chunk), axis, perm)
+
+    acc = jax.lax.fori_loop(0, n - 1, body, jnp.zeros_like(buf[0]))
+    own = jax.lax.dynamic_index_in_dim(buf, j, 0, keepdims=False)
+    return add(acc, own)
+
+
+def all_gather_chunked(chunk: jax.Array, axis: str) -> jax.Array:
+    """Inverse scatter: circulate reduced chunks. chunk j at rank j -> (n, ...)."""
+    n = jax.lax.axis_size(axis)
+    j = jax.lax.axis_index(axis)
+    perm = _ring_perm(n)
+    buf0 = jnp.zeros((n,) + chunk.shape, chunk.dtype)
+    buf0 = jax.lax.dynamic_update_index_in_dim(buf0, chunk, j, 0)
+
+    def body(s, state):
+        buf, cur = state
+        cur = jax.lax.ppermute(cur, axis, perm)
+        # after s+1 hops we hold the chunk owned by rank (j - s - 1) mod n
+        buf = jax.lax.dynamic_update_index_in_dim(buf, cur, (j - s - 1) % n, 0)
+        return buf, cur
+
+    buf, _ = jax.lax.fori_loop(0, n - 1, body, (buf0, chunk))
+    return buf
+
+
+# -- flat-buffer wrappers -----------------------------------------------------
+
+def ring_reduce_scatter(x: jax.Array, axis: str, add: AddFn) -> jax.Array:
+    """Flat (L,) per-device buffer -> this rank's reduced chunk (L/n,)."""
+    n = jax.lax.axis_size(axis)
+    L = x.shape[0]
+    assert L % n == 0, (L, n)
+    return reduce_scatter_chunked(x.reshape(n, L // n), axis, add)
+
+
+def ring_all_gather(chunk: jax.Array, axis: str) -> jax.Array:
+    """Rank-j-owns-chunk-j (c,) -> full (n*c,) reduced buffer on every rank."""
+    n = jax.lax.axis_size(axis)
+    return all_gather_chunked(chunk, axis).reshape(n * chunk.shape[0])
+
+
+def ring_all_reduce(x: jax.Array, axis: str, add: AddFn) -> jax.Array:
+    return ring_all_gather(ring_reduce_scatter(x, axis, add), axis)
+
+
+def hierarchical_reduce_scatter(x: jax.Array, axes: tuple[str, ...],
+                                add: AddFn) -> jax.Array:
+    """RS over axes[0], then axes[1], ... on the shrinking owned chunk.
+
+    This is the paper's two-switch chaining (§6.6) generalized: the first
+    axis is the intra-pod ICI ring; later axes (e.g. "pod") reduce the
+    already-scattered chunks so cross-pod traffic is 1/n_inner of the buffer.
+
+    x: (F, ...) — dim 0 divisible by prod(axis sizes); trailing dims may
+    carry auto (tensor-parallel) shardings. Ownership is axes[0]-major.
+    """
+    for ax in axes:
+        n = jax.lax.axis_size(ax)
+        f = x.shape[0]
+        assert f % n == 0, (f, n, ax)
+        x = reduce_scatter_chunked(x.reshape(n, f // n, *x.shape[1:]), ax,
+                                   add)
+    return x
+
+
+def hierarchical_all_gather(chunk: jax.Array, axes: tuple[str, ...]
+                            ) -> jax.Array:
+    """Inverse of hierarchical_reduce_scatter: (c, ...) -> (n_dp*c, ...)."""
+    for ax in reversed(axes):
+        n = jax.lax.axis_size(ax)
+        buf = all_gather_chunked(chunk, ax)      # (n, c, ...)
+        chunk = buf.reshape(n * chunk.shape[0], *chunk.shape[1:])
+    return chunk
+
+
+def hierarchical_all_reduce(x: jax.Array, axes: tuple[str, ...],
+                            add: AddFn) -> jax.Array:
+    return hierarchical_all_gather(hierarchical_reduce_scatter(x, axes, add),
+                                   axes)
+
+
+def dp_index(axes: tuple[str, ...]) -> jax.Array:
+    """Row-major rank over the product of the given manual axes."""
+    idx = 0
+    for ax in axes:
+        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+# -- INC-flavored instantiations ---------------------------------------------
+
+def sat_ring_all_reduce(q: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """int32 all-reduce where every hop is the switch's saturating Map.addTo."""
+    return hierarchical_all_reduce(q, axes, ops.sat_add)
+
+
+def fp32_ring_all_reduce(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Software-datapath all-reduce (the BytePS-style baseline)."""
+    return hierarchical_all_reduce(x, axes, jnp.add)

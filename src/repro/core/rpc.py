@@ -1,0 +1,201 @@
+"""RPCLayer: the gRPC-shaped programming model over the INCLayer (paper §4).
+
+Users define a service exactly as with vanilla gRPC — messages with typed
+fields, methods with request/reply types — replacing vanilla types with
+IEDTs (FPArray, IntArray, STRINTMap, Integer) for the fields the network
+should process, and attaching a NetFilter per method. The generated stub
+marshals arguments; IEDT fields travel the INC channel (the RIP pipeline
+below), normal fields pass through to the server handler untouched.
+
+Life of a call (Fig. 5): the client stub pushes the request stream through
+Stream.modify -> Map.addTo -> CntFwd gate; if CntFwd drops the packet the
+call returns early with only the INC side effects (sub-RTT path); otherwise
+the server handler runs and the reply stream executes Map.get (+ the
+configured Map.clear policy) on the way back.
+
+This module is deliberately framework-level (host-side, numpy): the
+device-resident SyncAgtr fast path is core/inc_agg.py; examples/paxos.py,
+examples/mapreduce.py and examples/monitoring.py build the paper's three
+other app types on this layer with ~20 lines each.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.channel import Channel, Controller
+from repro.core.clear_policy import POLICIES
+from repro.core.inc_map import hash_key
+from repro.core.netfilter import NetFilter
+from repro.kernels import ref
+
+# -- IEDTs -------------------------------------------------------------------
+
+IEDT_TYPES = ("FPArray", "IntArray", "STRINTMap", "Integer")
+
+
+@dataclass(frozen=True)
+class Field:
+    name: str
+    iedt: str | None = None        # None -> vanilla (pass-through) field
+
+    def __post_init__(self):
+        if self.iedt is not None and self.iedt not in IEDT_TYPES:
+            raise ValueError(f"unknown IEDT {self.iedt!r}")
+
+
+@dataclass(frozen=True)
+class Method:
+    name: str
+    request: tuple[Field, ...]
+    reply: tuple[Field, ...]
+    netfilter: NetFilter
+
+
+@dataclass
+class Service:
+    name: str
+    methods: dict[str, Method] = field(default_factory=dict)
+
+    def rpc(self, name: str, request: list[Field], reply: list[Field],
+            netfilter: NetFilter) -> None:
+        self.methods[name] = Method(name, tuple(request), tuple(reply),
+                                    netfilter)
+
+
+# -- server ------------------------------------------------------------------
+
+class Server:
+    """Hosts handlers; the INC layer invokes them only for packets that
+    pass the CntFwd gate (or when no CntFwd is configured)."""
+
+    def __init__(self):
+        self.handlers: dict[str, Callable[[dict], dict]] = {}
+        self.calls_seen = 0
+
+    def register(self, method: str, fn: Callable[[dict], dict]) -> None:
+        self.handlers[method] = fn
+
+    def handle(self, method: str, request: dict) -> dict:
+        self.calls_seen += 1
+        fn = self.handlers.get(method)
+        return fn(request) if fn else {}
+
+
+# -- client stub -------------------------------------------------------------
+
+class Stub:
+    """The compiled client stub: user code is identical to vanilla gRPC."""
+
+    def __init__(self, service: Service, channels: dict[str, Channel],
+                 server: Server):
+        self.service = service
+        self.channels = channels          # method -> Channel
+        self.server = server
+        self.agents = {m: ch.client() for m, ch in channels.items()}
+
+    def call(self, method: str, request: dict) -> dict:
+        md = self.service.methods[method]
+        ch = self.channels[method]
+        nf = md.netfilter
+        agent = self.agents[method]
+        ch.touch()
+        ch.stats.calls += 1
+        scale = 10 ** nf.precision
+
+        # ---- request path: Stream.modify then Map.addTo -------------------
+        def stream_items(msg_field: str) -> dict:
+            # "Message.field" -> items of that request field
+            fname = msg_field.split(".")[-1]
+            v = request.get(fname)
+            if v is None:
+                return {}
+            if isinstance(v, dict):
+                return v
+            return {i: x for i, x in enumerate(np.asarray(v).ravel())}
+
+        if nf.add_to != "nop":
+            items = stream_items(nf.add_to)
+            if nf.modify.op != "nop":
+                vals = ref.stream_modify(
+                    np.array([int(round(x * scale)) for x in items.values()],
+                             np.int32), nf.modify.op, nf.modify.para)
+                items = dict(zip(items.keys(),
+                                 np.asarray(vals, np.int64) / scale))
+            agent.addto(items, nf.precision)
+
+        # ---- CntFwd gate ---------------------------------------------------
+        forwarded = True
+        if nf.cnt_fwd.enabled:
+            # Table 2: cnt[key]++; forward iff cnt == threshold (exact), so
+            # late packets after the quorum are dropped too
+            ballot = request.get(nf.cnt_fwd.key.split(".")[-1])
+            tag = (next(iter(ballot)) if isinstance(ballot, dict)
+                   else nf.cnt_fwd.key)
+            key = hash_key(f"__cntfwd__{tag}")
+            agent.server.addto_batch(np.array([key], np.uint32),
+                                     np.array([1], np.int64))
+            cnt = agent.server.read(key)
+            forwarded = cnt == nf.cnt_fwd.threshold
+            if forwarded and nf.clear != "nop":
+                agent.server.addto_batch(np.array([key], np.uint32),
+                                         np.array([-cnt], np.int64))
+
+        reply: dict = {}
+        if forwarded:
+            # normal (non-IEDT) fields pass through to the server handler
+            passthrough = {f.name: request.get(f.name)
+                           for f in md.request if f.iedt is None}
+            reply = dict(self.server.handle(method, passthrough) or {})
+
+        # ---- reply path: Map.get (+ clear policy) --------------------------
+        if nf.get != "nop" and forwarded:
+            fname = nf.get.split(".")[-1]
+            if nf.add_to != "nop":
+                keys = list(stream_items(nf.add_to).keys())
+            else:
+                keys = list(request.get(fname, {}).keys()) or \
+                    list(agent.server.spill.keys())
+            out = {k: agent.read(k, nf.precision) for k in keys}
+            reply[fname] = out
+            if nf.clear in POLICIES:
+                # copy: values are already backed up server-side (the read
+                # above); shadow/lazy semantics are exercised on the device
+                # path (core/clear_policy.py) — here clear empties the map.
+                for k in keys:
+                    cur = agent.server.read(hash_key(k) if not isinstance(
+                        k, int) else k)
+                    if cur:
+                        agent.server.addto_batch(
+                            np.array([hash_key(k) if not isinstance(k, int)
+                                      else k], np.uint32),
+                            np.array([-cur], np.int64))
+        return reply
+
+
+# -- runtime -----------------------------------------------------------------
+
+class NetRPC:
+    """In-process NetRPC runtime: controller + switch + agents.
+
+    make_stub() is the analogue of `NewStub(channel)`; one Channel (GAID,
+    switch partition) is created per method's NetFilter AppName, shared by
+    all stubs of that app — the multi-application data plane.
+    """
+
+    def __init__(self, controller: Controller | None = None):
+        self.controller = controller or Controller()
+        self.server = Server()
+
+    def make_stub(self, service: Service, n_slots: int = 4096) -> Stub:
+        channels = {}
+        for mname, md in service.methods.items():
+            app = md.netfilter.app_name
+            if app in self.controller.by_name:
+                ch = self.controller.lookup(app)
+            else:
+                ch = self.controller.register(md.netfilter, n_slots)
+            channels[mname] = ch
+        return Stub(service, channels, self.server)

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: fused dequantize + overflow-sentinel detect.
+
+Receive-side hot spot of the NetRPC path: int32 fixed-point values coming
+out of the in-network reduction are mapped back to fp32, and sentinel lanes
+(overflow happened on some hop) are flagged so the caller can run the
+fp32 host-fallback re-aggregation for exactly those lanes (paper §5.2.1).
+
+Same (rows, 128) layout / (256, 128) block tiling as quantize; outputs are
+an fp32 block plus a bool mask block (stored as int8 lanes on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.constants import (DEFAULT_BLOCK_ROWS, INT32_MAX, INT32_MIN,
+                                     LANES)
+
+
+def _dequantize_kernel(inv_scale_ref, q_ref, x_ref, m_ref):
+    q = q_ref[...]
+    inv_scale = inv_scale_ref[0, 0]
+    sent = (q == INT32_MAX) | (q == INT32_MIN)
+    x_ref[...] = q.astype(jnp.float32) * inv_scale
+    m_ref[...] = sent
+
+
+def dequantize_pallas(q: jax.Array, scale: jax.Array, *,
+                      block_rows: int = DEFAULT_BLOCK_ROWS,
+                      interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """q: int32 (rows, LANES) -> (fp32 values, bool overflow mask)."""
+    rows, lanes = q.shape
+    assert lanes == LANES, f"minor dim must be {LANES}, got {lanes}"
+    assert rows % block_rows == 0, (rows, block_rows)
+    inv = jnp.reshape(1.0 / scale.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        _dequantize_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((rows, lanes), jnp.float32),
+            jax.ShapeDtypeStruct((rows, lanes), jnp.bool_),
+        ),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        ),
+        interpret=interpret,
+    )(inv, q)

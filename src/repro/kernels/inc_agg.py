@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: saturating int32 Map.addTo — the per-hop accumulate.
+
+This is the TPU realization of the switch's per-packet `Map.addTo`: each hop
+of the ICI ring reduce-scatter adds the in-flight chunk (the "packet") into
+the locally held chunk (the "switch register segment"), saturating on
+overflow to the MAX_INT/MIN_INT sentinel and keeping sentinels sticky so the
+receiver can identify overflowed lanes regardless of which hop overflowed.
+
+int64 is deliberately avoided (TPU VPU has no cheap 64-bit lanes): overflow
+is reconstructed from the wrapped 32-bit sum:
+    s = a + b (wraps);  a>0 & b>0 & s<a  => positive overflow
+                        a<0 & b<0 & s>a  => negative overflow
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.constants import (DEFAULT_BLOCK_ROWS, INT32_MAX, INT32_MIN,
+                                     LANES, SAT_MAX, SAT_MIN)
+
+
+def _sat_add_block(a, b):
+    s = a + b
+    pos_ovf = (a > 0) & (b > 0) & (s < a)
+    neg_ovf = (a < 0) & (b < 0) & (s > a)
+    out = jnp.where(pos_ovf, jnp.int32(INT32_MAX), s)
+    out = jnp.where(neg_ovf, jnp.int32(INT32_MIN), out)
+    # non-wrapped sums landing exactly on a reserved value are genuinely
+    # out of SAT range -> they read as sentinels and the fallback repairs
+    # them (see kernels/ref.py)
+    out = jnp.where(b == INT32_MAX, jnp.int32(INT32_MAX), out)
+    out = jnp.where(b == INT32_MIN, jnp.int32(INT32_MIN), out)
+    out = jnp.where(a == INT32_MAX, jnp.int32(INT32_MAX), out)
+    out = jnp.where(a == INT32_MIN, jnp.int32(INT32_MIN), out)
+    return out
+
+
+def _sat_add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = _sat_add_block(a_ref[...], b_ref[...])
+
+
+def sat_add_pallas(a: jax.Array, b: jax.Array, *,
+                   block_rows: int = DEFAULT_BLOCK_ROWS,
+                   interpret: bool = True) -> jax.Array:
+    """a, b: int32 (rows, LANES) -> saturating elementwise sum."""
+    rows, lanes = a.shape
+    assert a.shape == b.shape
+    assert lanes == LANES, f"minor dim must be {LANES}, got {lanes}"
+    assert rows % block_rows == 0, (rows, block_rows)
+    return pl.pallas_call(
+        _sat_add_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        interpret=interpret,
+    )(a, b)

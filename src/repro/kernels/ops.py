@@ -1,0 +1,150 @@
+"""Dispatching wrappers around the INC kernel family.
+
+Callers use these entry points; each picks the Pallas kernel on TPU (or in
+interpret mode when REPRO_PALLAS_INTERPRET=1, used by tests) and the pure-jnp
+oracle otherwise (the dry-run / CPU path — interpret-mode Pallas inside a
+512-device lowering would be pointlessly slow and is not what ships on TPU).
+
+All wrappers accept flat 1-D streams of arbitrary length; padding to the
+(rows, 128) tile layout is handled here so kernels only see aligned blocks.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.constants import DEFAULT_BLOCK_ROWS, LANES
+from repro.kernels.dequantize import dequantize_pallas
+from repro.kernels.flash_attn import (flash_attention_chunked_ref,
+                                      flash_attention_pallas)
+from repro.kernels.inc_agg import sat_add_pallas
+from repro.kernels.pack_int8 import pack_int8_pallas, unpack_int8_pallas
+from repro.kernels.quantize import quantize_pallas
+from repro.kernels.sparse_addto import sparse_addto_pallas
+
+
+def use_pallas() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_tiles(x: jax.Array, block_rows: int) -> tuple[jax.Array, int]:
+    """Flat (n,) -> padded (rows, LANES) with rows % block_rows == 0."""
+    n = x.shape[0]
+    tile = block_rows * LANES
+    n_pad = (-n) % tile
+    x = jnp.pad(x, (0, n_pad))
+    return x.reshape(-1, LANES), n
+
+
+def _from_tiles(x: jax.Array, n: int) -> jax.Array:
+    return x.reshape(-1)[:n]
+
+
+# -- public API --------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def quantize(x: jax.Array, scale: jax.Array,
+             block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """fp32 (n,) -> int32 (n,) fixed point with sentinel saturation."""
+    if not use_pallas():
+        return ref.quantize(x, scale)
+    t, n = _to_tiles(x.astype(jnp.float32), block_rows)
+    q = quantize_pallas(t, jnp.asarray(scale), block_rows=block_rows,
+                        interpret=_interpret())
+    return _from_tiles(q, n)
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def dequantize(q: jax.Array, scale: jax.Array,
+               block_rows: int = DEFAULT_BLOCK_ROWS
+               ) -> tuple[jax.Array, jax.Array]:
+    """int32 (n,) -> (fp32 (n,), bool overflow mask (n,))."""
+    if not use_pallas():
+        return ref.dequantize(q, scale)
+    t, n = _to_tiles(q, block_rows)
+    x, m = dequantize_pallas(t, jnp.asarray(scale), block_rows=block_rows,
+                             interpret=_interpret())
+    return _from_tiles(x, n), _from_tiles(m, n)
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def sat_add(a: jax.Array, b: jax.Array,
+            block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """int32 saturating add with sticky sentinels (Map.addTo hop). Any shape."""
+    if not use_pallas():
+        return ref.sat_add(a, b)
+    shape = a.shape
+    ta, n = _to_tiles(a.reshape(-1), block_rows)
+    tb, _ = _to_tiles(b.reshape(-1), block_rows)
+    s = sat_add_pallas(ta, tb, block_rows=block_rows, interpret=_interpret())
+    return _from_tiles(s, n).reshape(shape)
+
+
+@jax.jit
+def sparse_addto(regs: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
+    """Sequential saturating scatter-add of (idx, val) pairs into regs."""
+    if not use_pallas():
+        return ref.sparse_addto(regs, idx, val)
+    return sparse_addto_pallas(regs, idx, val, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def pack_int8(x: jax.Array, block_rows: int = DEFAULT_BLOCK_ROWS
+              ) -> tuple[jax.Array, jax.Array]:
+    """fp32 (n,) -> (int8 (rows,128), fp32 scales (rows,)). Padded tiles.
+
+    The caller keeps x.shape[0] to truncate after unpack_int8.
+    """
+    t, _ = _to_tiles(x.astype(jnp.float32), block_rows)
+    if not use_pallas():
+        q, s = ref.pack_int8_block(t)
+    else:
+        q, s = pack_int8_pallas(t, block_rows=block_rows,
+                                interpret=_interpret())
+    return q, s
+
+
+@partial(jax.jit, static_argnames=("block_rows", "n"))
+def unpack_int8(q: jax.Array, scale: jax.Array, n: int,
+                block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """(int8 tiles, scales, n) -> fp32 (n,)."""
+    if not use_pallas():
+        x = ref.unpack_int8_block(q, scale)
+    else:
+        x = unpack_int8_pallas(q, scale, block_rows=block_rows,
+                               interpret=_interpret())
+    return _from_tiles(x, n)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True,
+                    window: int | None = None) -> jax.Array:
+    """(B,S,H,D) x (B,S,KV,D) -> (B,S,H,D) flash attention.
+
+    Wrapped in a named_scope so the roofline analyzer can attribute this
+    region to the VMEM-resident Pallas kernel (kernels/flash_attn.py): on
+    CPU the oracle lowers instead (same math), and its HBM-traffic lines
+    are replaced by the kernel's analytic q+o+nq*(k+v) model.
+    """
+    with jax.named_scope("flash_attention"):
+        qt = jnp.swapaxes(q, 1, 2)
+        kt = jnp.swapaxes(k, 1, 2)
+        vt = jnp.swapaxes(v, 1, 2)
+        if use_pallas():
+            o = flash_attention_pallas(qt, kt, vt, causal=causal,
+                                       window=window,
+                                       interpret=_interpret())
+        else:
+            o = flash_attention_chunked_ref(qt, kt, vt, causal=causal,
+                                            window=window)
+        return jnp.swapaxes(o, 1, 2)

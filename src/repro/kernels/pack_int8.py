@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: block-scaled int8 pack/unpack (beyond-paper wire format).
+
+NetRPC's wire format is 32-bit fixed point. On TPU the analogous "wire" is
+ICI collective traffic, and the netrpc-opt mode compresses it 4x further
+with per-row (128-lane block) scaling to int8, chosen such that overflow is
+*impossible* for up to 2**24 / 127 summands when accumulated in int32 —
+replacing the paper's overflow-detect-and-fallback with a static guarantee.
+
+Fused: amax reduction + scale + round + clamp in one VMEM pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.constants import DEFAULT_BLOCK_ROWS, LANES
+
+
+def _pack_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale[..., 0]
+
+
+def pack_int8_pallas(x: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                     interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """x: fp32 (rows, LANES) -> (int8 q (rows, LANES), fp32 scale (rows,))."""
+    rows, lanes = x.shape
+    assert lanes == LANES, f"minor dim must be {LANES}, got {lanes}"
+    assert rows % block_rows == 0, (rows, block_rows)
+    return pl.pallas_call(
+        _pack_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int8),
+            jax.ShapeDtypeStruct((rows,), jnp.float32),
+        ),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ),
+        interpret=interpret,
+    )(x)
+
+
+def _unpack_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...][..., None]
+
+
+def unpack_int8_pallas(q: jax.Array, scale: jax.Array, *,
+                       block_rows: int = DEFAULT_BLOCK_ROWS,
+                       interpret: bool = True) -> jax.Array:
+    rows, lanes = q.shape
+    assert lanes == LANES
+    assert rows % block_rows == 0, (rows, block_rows)
+    return pl.pallas_call(
+        _unpack_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.float32),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        interpret=interpret,
+    )(q, scale)

@@ -1,0 +1,180 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each Pallas kernel's test sweeps
+shapes/dtypes and asserts allclose against the function here. They are also
+the implementations used on non-TPU backends (the dry-run path), so they are
+written to lower to clean XLA HLO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.constants import INT32_MAX, INT32_MIN, SAT_MAX, SAT_MIN
+
+
+# ---------------------------------------------------------------------------
+# fixed-point quantization (paper §5.2.1, NetFilter "Precision")
+# ---------------------------------------------------------------------------
+
+def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """fp -> int32 fixed point: round(x*scale), saturating to sentinels.
+
+    Values whose magnitude exceeds the representable range quantize directly
+    to the overflow sentinel (the "switch" would have produced it anyway).
+    """
+    y = jnp.asarray(x, jnp.float32) * jnp.asarray(scale, jnp.float32)
+    y = jnp.round(y)
+    q = jnp.clip(y, SAT_MIN, SAT_MAX).astype(jnp.int32)
+    q = jnp.where(y > SAT_MAX, jnp.int32(INT32_MAX), q)
+    q = jnp.where(y < SAT_MIN, jnp.int32(INT32_MIN), q)
+    return q
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """int32 fixed point -> (fp32 value, overflow mask).
+
+    The mask marks sentinel lanes; the caller (host agent) must fall back to
+    fp32 re-aggregation for those lanes (paper §5.2.1).
+    """
+    overflow = is_sentinel(q)
+    # multiply by the reciprocal (not divide): matches the TPU kernel, which
+    # hoists 1/scale out of the block loop.
+    x = q.astype(jnp.float32) * (1.0 / jnp.asarray(scale, jnp.float32))
+    return x, overflow
+
+
+def is_sentinel(q: jax.Array) -> jax.Array:
+    return (q == INT32_MAX) | (q == INT32_MIN)
+
+
+# ---------------------------------------------------------------------------
+# saturating Map.addTo (the per-hop switch accumulate)
+# ---------------------------------------------------------------------------
+
+def sat_add(a: jax.Array, b: jax.Array) -> jax.Array:
+    """int32 saturating add with sentinel propagation.
+
+    - overflow (beyond SAT range) produces the signed sentinel;
+    - an input sentinel is sticky: once a lane overflowed on any hop it stays
+      a sentinel for the rest of the reduction (so the receiver can detect
+      it no matter where in the ring the overflow happened).
+    """
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    # wrapping add then overflow reconstruction (TPU-friendly: no int64)
+    s = a + b
+    pos_ovf = (a > 0) & (b > 0) & (s < a)
+    neg_ovf = (a < 0) & (b < 0) & (s > a)
+    out = jnp.where(pos_ovf, jnp.int32(INT32_MAX), s)
+    out = jnp.where(neg_ovf, jnp.int32(INT32_MIN), out)
+    # NOTE: a non-wrapped sum can land exactly on a reserved value
+    # (SAT_MAX + 1 == INT32_MAX). The true sum is then outside the
+    # representable SAT range, so the reserved value is the CORRECT result:
+    # it reads as the overflow sentinel and the fp32 fallback repairs the
+    # lane (the paper's footnote-1 false positive, resolved conservatively).
+    # sticky sentinel propagation (a's sentinel wins on conflict)
+    out = jnp.where(b == INT32_MAX, jnp.int32(INT32_MAX), out)
+    out = jnp.where(b == INT32_MIN, jnp.int32(INT32_MIN), out)
+    out = jnp.where(a == INT32_MAX, jnp.int32(INT32_MAX), out)
+    out = jnp.where(a == INT32_MIN, jnp.int32(INT32_MIN), out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sparse Map.addTo into a register file (the INC map, paper §5.2.2)
+# ---------------------------------------------------------------------------
+
+def sparse_addto(regs: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
+    """regs[idx[i]] = sat_add(regs[idx[i]], val[i]) applied *sequentially*.
+
+    Sequential order matters when duplicates saturate; the oracle fixes the
+    order as i = 0..k-1 and the kernel must match it.
+    """
+    def body(i, r):
+        j = idx[i]
+        return r.at[j].set(sat_add(r[j], val[i]))
+    return jax.lax.fori_loop(0, idx.shape[0], body, regs.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# block-scaled int8 pack (beyond-paper wire compression for netrpc-opt)
+# ---------------------------------------------------------------------------
+
+def pack_int8_block(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """fp32 (rows, lanes) -> (int8 q, fp32 per-row scale).
+
+    scale = max|row| / 127 (0 -> scale 1 to keep dequant exact for zeros).
+    q = round(x / scale) in [-127, 127].
+    """
+    x = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def unpack_int8_block(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Stream.modify (paper Table 8) — elementwise stream arithmetic
+# ---------------------------------------------------------------------------
+
+STREAM_OPS = ("nop", "max", "min", "add", "assign",
+              "shiftl", "shiftr", "band", "bor", "bnot", "bxor")
+
+
+def stream_modify(v: jax.Array, op: str, para: jax.Array | int = 0) -> jax.Array:
+    """Apply one Table-8 arithmetic op to an int32 stream."""
+    v = v.astype(jnp.int32)
+    p = jnp.asarray(para, jnp.int32)
+    if op == "nop":
+        return v
+    if op == "max":
+        return jnp.maximum(v, p)
+    if op == "min":
+        return jnp.minimum(v, p)
+    if op == "add":
+        return sat_add(v, jnp.broadcast_to(p, v.shape))
+    if op == "assign":
+        return jnp.broadcast_to(p, v.shape).astype(jnp.int32)
+    if op == "shiftl":
+        return v << p
+    if op == "shiftr":
+        return v >> p
+    if op == "band":
+        return v & p
+    if op == "bor":
+        return v | p
+    if op == "bnot":
+        return ~v
+    if op == "bxor":
+        return v ^ p
+    raise ValueError(f"unknown Stream.modify op: {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle (beyond-paper kernel; see kernels/flash_attn.py)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True,
+                    window: int | None = None) -> jax.Array:
+    """q: (B,H,S,D); k/v: (B,KV,S,D) -> (B,H,S,D). fp32 softmax."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, s, d)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        if window is not None:
+            pos = jnp.arange(s)
+            mask = mask & (pos[:, None] - pos[None, :] < window)
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return o.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,90 @@
+"""Elastic / fault-tolerant training driver (cluster-scale contract demo).
+
+Simulates the failure modes a 1000-node deployment must survive and shows
+the framework's answers, all on host devices:
+
+  preemption + restart   checkpoint/restart with the step-parity
+                         exactly-once gate (a re-executed step is detected
+                         as a "retransmission" and skipped — the paper's
+                         flip-bit idempotency at cluster scale);
+  straggler mitigation   CntFwd elastic quorum: a step commits when
+                         >= quorum x n_dp workers contributed; the
+                         aggregated sum is normalized by the live count
+                         (paper §4: "forward when the counter reaches the
+                         threshold", used as a partial-aggregation gate);
+  elastic resize         ZeRO chunks re-sliced for a different dp size on
+                         restore (checkpoint/store.resize_chunks).
+
+    PYTHONPATH=src python -m repro.launch.elastic --arch qwen2.5-3b \
+        --steps 40 --kill-at 20
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs.base import get_arch
+from repro.core.agreement import elastic_mean, quorum_commit, quorum_count
+from repro.launch.train import train_loop
+
+
+def run(arch: str, steps_n: int, kill_at: int, ckpt_dir: str) -> dict:
+    # phase 1: train until the simulated preemption
+    print(f"=== phase 1: train to step {kill_at}, then 'preempt' ===")
+    out1 = train_loop(arch=arch, inc_mode="netrpc", steps_n=kill_at,
+                      seq=64, batch=8, reduced=True, ckpt_dir=ckpt_dir,
+                      ckpt_every=5, resume=False)
+    # phase 2: restart from the latest checkpoint; the loop's
+    # already_applied() gate skips any step whose effects are persisted
+    print("=== phase 2: restart, resume from checkpoint ===")
+    out2 = train_loop(arch=arch, inc_mode="netrpc", steps_n=steps_n,
+                      seq=64, batch=8, reduced=True, ckpt_dir=ckpt_dir,
+                      ckpt_every=5, resume=True)
+    print(f"pre-kill last loss {out1['losses'][-1]:.4f}; "
+          f"post-restart final {out2['losses'][-1]:.4f}")
+    return {"phase1": out1["losses"], "phase2": out2["losses"]}
+
+
+def quorum_demo(n_dp: int = 8, quorum: float = 0.75) -> None:
+    """Straggler mitigation on host devices: drop workers, commit anyway."""
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def step(contrib, grads):
+        cnt = quorum_count(contrib, ("data",))
+        commit = quorum_commit(cnt, int(quorum * jax.lax.axis_size("data")))
+        total = jax.lax.psum(jnp.where(contrib > 0, grads, 0.0), ("data",))
+        return jnp.where(commit, elastic_mean(total, cnt), 0.0), cnt, commit
+
+    f = jax.jit(jax.shard_map(step, mesh=mesh,
+                              in_specs=(jax.sharding.PartitionSpec("data"),
+                                        jax.sharding.PartitionSpec("data")),
+                              out_specs=(jax.sharding.PartitionSpec("data"),
+                                         jax.sharding.PartitionSpec("data"),
+                                         jax.sharding.PartitionSpec("data")),
+                              axis_names={"data"}, check_vma=False))
+    n = len(jax.devices())
+    grads = jnp.arange(n, dtype=jnp.float32) + 1.0
+    for alive in (n, max(1, int(n * 0.9)), max(1, int(n * 0.5))):
+        contrib = (jnp.arange(n) < alive).astype(jnp.float32)
+        mean, cnt, commit = f(contrib, grads)
+        print(f"alive {alive}/{n}: count={int(cnt[0])} "
+              f"commit={bool(commit[0])} elastic_mean={float(mean[0]):.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--kill-at", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_elastic_ckpt")
+    args = ap.parse_args()
+    run(args.arch, args.steps, args.kill_at, args.ckpt_dir)
+    quorum_demo()
+
+
+if __name__ == "__main__":
+    main()

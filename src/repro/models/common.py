@@ -1,0 +1,73 @@
+"""Shared model components: norms, RoPE, initializers, dtype policy.
+
+Conventions used across the zoo:
+  - params are plain dict pytrees of bf16 `jnp` arrays (fp32 for norm scales
+    and recurrence decay parameters where precision matters);
+  - activations are bf16; softmax/logsumexp/norm statistics are fp32;
+  - every stacked-over-layers leaf has the repeat dim first (scan dim 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DTYPE = jnp.bfloat16
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, shape, fan_in: int | None = None, dtype=PARAM_DTYPE):
+    fan = fan_in if fan_in is not None else shape[0]
+    std = fan ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=PARAM_DTYPE):
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rms_norm_init(d: int) -> jax.Array:
+    # stored as (scale - 1) like gemma: zeros == identity
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, d/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., seq, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (n, d)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10_000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def stack_layers(init_one, rng: jax.Array, n: int):
+    """vmap a per-layer initializer into stacked (n, ...) leaves (jit-able)."""
+    keys = jax.vmap(lambda i: jax.random.fold_in(rng, i))(jnp.arange(n))
+    return jax.vmap(init_one)(keys)

@@ -1,0 +1,114 @@
+"""Feed-forward layers: SwiGLU, GELU MLP, and capacity-based MoE.
+
+MoE dispatch is sort-based (static shapes, TPU-friendly): tokens are
+replicated top_k times, sorted by expert id, scattered into a per-expert
+capacity buffer (overflow tokens dropped — standard GShard semantics), run
+through a grouped einsum, and gathered back with router weights. Expert
+weights are sharded over the 'model' mesh axis on the d_ff dim (expert
+tensor parallelism), so no all-to-all is needed: activations stay
+data-parallel-local and GSPMD inserts the usual Megatron-style partial-sum
+all-reduce after w2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, d: int, ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w1": dense_init(k1, (d, ff)),
+            "w3": dense_init(k2, (d, ff)),
+            "w2": dense_init(k3, (ff, d), fan_in=ff)}
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+def init_gelu_mlp(key, d: int, ff: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"w1": dense_init(k1, (d, ff)), "b1": jnp.zeros((ff,), jnp.float32),
+            "w2": dense_init(k2, (ff, d), fan_in=ff),
+            "b2": jnp.zeros((d,), jnp.float32)}
+
+
+def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu((x @ p["w1"] + p["b1"]).astype(x.dtype))
+    return (h @ p["w2"] + p["b2"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def init_moe(key, d: int, ff: int, n_experts: int) -> dict:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, (d, n_experts)).astype(jnp.float32),
+        "experts": {
+            "w1": dense_init(k1, (n_experts, d, ff), fan_in=d),
+            "w3": dense_init(k2, (n_experts, d, ff), fan_in=d),
+            "w2": dense_init(k3, (n_experts, ff, d), fan_in=ff),
+        },
+    }
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    c = int(n_tokens * top_k / n_experts * capacity_factor)
+    return max(8, -(-c // 8) * 8)      # round up to a multiple of 8
+
+
+def moe_apply(p: dict, x: jax.Array, *, top_k: int,
+              capacity_factor: float) -> tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) -> (y (B,S,d), aux load-balance loss scalar)."""
+    b, s, d = x.shape
+    e = p["router"].shape[-1]
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)      # (T,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    counts = jnp.sum(jax.nn.one_hot(expert_ids, e, dtype=jnp.float32),
+                     axis=(0, 1))                            # (E,)
+    f = counts / (t * top_k)
+    pbar = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f * pbar)
+
+    # sort-based dispatch
+    cap = moe_capacity(t, e, top_k, capacity_factor)
+    e_flat = expert_ids.reshape(-1)                          # (T*k,)
+    g_flat = gate_vals.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(t), top_k)
+    order = jnp.argsort(e_flat)
+    e_s, g_s, tok_s = e_flat[order], g_flat[order], tok_flat[order]
+    # rank of each routed token within its expert
+    start = jnp.cumsum(jnp.bincount(e_s, length=e)) - jnp.bincount(e_s,
+                                                                   length=e)
+    rank = jnp.arange(t * top_k) - start[e_s]
+    dest = jnp.where(rank < cap, e_s * cap + rank, e * cap)  # overflow -> bin
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].set(xf[tok_s])
+    buf = buf[:-1].reshape(e, cap, d)
+
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["experts"]["w1"]))
+         * jnp.einsum("ecd,edf->ecf", buf, p["experts"]["w3"]))
+    out = jnp.einsum("ecf,efd->ecd", h, p["experts"]["w2"])
+
+    out_flat = out.reshape(e * cap, d)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((1, d), x.dtype)], 0)
+    y_s = out_flat[dest] * g_s[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[tok_s].add(y_s)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,97 @@
+"""RG-LRU temporal-mixing block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+a_t = exp(-c * softplus(Lambda) * r_t),  r/i input-dependent sigmoid gates.
+
+Training uses `jax.lax.associative_scan` over the sequence (log-depth on
+TPU); decode is the O(1) single-step recurrence. The r/i gate projections
+are block-diagonal as in Griffin — which is also what makes them tensor-
+parallel: blocks shard over the 'model' axis with no collective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.ssm import causal_conv1d, conv1d_step
+
+_C = 8.0
+N_GATE_BLOCKS = 16
+
+
+def init_rglru(key, d_model: int, rnn_width: int, d_conv: int = 4) -> dict:
+    ks = jax.random.split(key, 6)
+    u = jax.random.uniform(ks[5], (rnn_width,), jnp.float32, 0.9, 0.999)
+    # Lambda chosen so a = u at r = 1 (softplus^-1 of -log(u)/c)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))
+    nb = N_GATE_BLOCKS if rnn_width % N_GATE_BLOCKS == 0 else 1
+    c = rnn_width // nb
+    bd = lambda k: (jax.random.normal(k, (nb, c, c), jnp.float32)
+                    * (c ** -0.5)).astype(jnp.bfloat16)
+    return {
+        "w_in_a": dense_init(ks[0], (d_model, rnn_width)),
+        "w_in_b": dense_init(ks[1], (d_model, rnn_width)),
+        "conv_w": (jax.random.normal(ks[2], (d_conv, rnn_width), jnp.float32)
+                   * (d_conv ** -0.5)),
+        "conv_b": jnp.zeros((rnn_width,), jnp.float32),
+        "wr": bd(ks[3]),
+        "br": jnp.zeros((rnn_width,), jnp.float32),
+        "wi": bd(ks[4]),
+        "bi": jnp.zeros((rnn_width,), jnp.float32),
+        "lam": lam,
+        "w_out": dense_init(jax.random.fold_in(key, 7),
+                            (rnn_width, d_model), fan_in=rnn_width),
+    }
+
+
+def _block_diag(x, w):
+    """x: (..., rnn), w: (nb, c, c) block-diagonal -> (..., rnn)."""
+    nb, c, _ = w.shape
+    xb = x.reshape(*x.shape[:-1], nb, c)
+    y = jnp.einsum("...nc,ncd->...nd", xb, w)
+    return y.reshape(*x.shape)
+
+
+def _gates(p, xa):
+    r = jax.nn.sigmoid(_block_diag(xa, p["wr"]).astype(jnp.float32) + p["br"])
+    i = jax.nn.sigmoid(_block_diag(xa, p["wi"]).astype(jnp.float32) + p["bi"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * i * xa.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_train(p: dict, x: jax.Array):
+    """x: (B,S,d_model) -> (y (B,S,d_model), final_state, conv_tail)."""
+    xa = x @ p["w_in_a"]
+    xa = jax.nn.silu(causal_conv1d(xa, p["conv_w"], p["conv_b"])
+                     ).astype(x.dtype)
+    a, gated = _gates(p, xa)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    xb = jax.nn.gelu((x @ p["w_in_b"]).astype(jnp.float32))
+    y = (h * xb).astype(x.dtype) @ p["w_out"]
+    k = p["conv_w"].shape[0]
+    return y, h[:, -1, :], (x @ p["w_in_a"])[:, -(k - 1):, :]
+
+
+def rglru_decode(p: dict, x1: jax.Array, state, conv_state):
+    """x1: (B,1,d_model); state: (B,rnn) fp32; conv_state: (B,K-1,rnn)."""
+    xa_in = (x1 @ p["w_in_a"])[:, 0]
+    window = jnp.concatenate(
+        [conv_state, xa_in[:, None, :].astype(conv_state.dtype)], axis=1)
+    xa = jax.nn.silu(conv1d_step(window, p["conv_w"], p["conv_b"])
+                     ).astype(x1.dtype)
+    conv_state = window[:, 1:]
+    a, gated = _gates(p, xa)
+    state = a * state + gated
+    xb = jax.nn.gelu((x1[:, 0] @ p["w_in_b"]).astype(jnp.float32))
+    y = (state * xb).astype(x1.dtype) @ p["w_out"]
+    return y[:, None, :], state, conv_state

@@ -1,0 +1,179 @@
+"""Mamba-2 mixer with the SSD (state-space duality) chunked algorithm.
+
+Follows the minimal SSD formulation of arXiv:2405.21060: the sequence is
+split into chunks; within-chunk terms are computed as (masked, decay-
+weighted) matmuls — the "dual" quadratic attention form, which is what maps
+onto the MXU — and chunk states are passed through a short sequential scan.
+All decay arithmetic is fp32.
+
+The input projection is stored as separate leaves per component (z, x, B,
+C, dt) rather than one fused matrix so tensor parallelism can shard the
+z/x/dt projections over heads while the tiny B/C projections stay
+replicated (a fused projection cannot carry a mixed sharding).
+
+Decode is the recurrent form: O(1) state update per token
+(h <- exp(dt*A) h + dt * B x), which is why long_500k runs for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+SSD_CHUNK = 256
+
+
+def init_mamba2(key, d_model: int, n_heads: int, head_dim: int,
+                d_state: int, d_conv: int) -> dict:
+    d_inner = n_heads * head_dim
+    ks = jax.random.split(key, 8)
+    cw = lambda k, c: (jax.random.normal(k, (d_conv, c), jnp.float32)
+                       * (d_conv ** -0.5))
+    return {
+        "w_z": dense_init(ks[0], (d_model, d_inner)),
+        "w_x": dense_init(ks[1], (d_model, d_inner)),
+        "w_B": dense_init(ks[2], (d_model, d_state)),
+        "w_C": dense_init(ks[3], (d_model, d_state)),
+        "w_dt": dense_init(ks[4], (d_model, n_heads)),
+        "conv_x": cw(ks[5], d_inner),
+        "conv_B": cw(ks[6], d_state),
+        "conv_C": cw(ks[7], d_state),
+        "conv_bx": jnp.zeros((d_inner,), jnp.float32),
+        "conv_bB": jnp.zeros((d_state,), jnp.float32),
+        "conv_bC": jnp.zeros((d_state,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),   # A = -exp(A_log) = -1
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "w_out": dense_init(jax.random.fold_in(key, 9),
+                            (d_inner, d_model), fan_in=d_inner),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C), w: (K,C) -> (B,S,C), fp32."""
+    k = w.shape[0]
+    s = x.shape[1]
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(w[j] * jax.lax.dynamic_slice_in_dim(xp, j, s, axis=1)
+            for j in range(k))
+    return y + b
+
+
+def conv1d_step(window: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """window: (B,K,C) (oldest first, newest = current input) -> (B,C)."""
+    return jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w) + b
+
+
+def ssd_chunked(x_h, dt, a, bmat, cmat, chunk: int):
+    """SSD over chunks.
+
+    x_h: (B,S,H,P) values; dt: (B,S,H) fp32 step sizes; a: (H,) negative;
+    bmat/cmat: (B,S,N) (single group, shared across heads).
+    Returns (y (B,S,H,P), final_state (B,H,P,N) fp32).
+    """
+    b, s, h, p = x_h.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    x_dt = (x_h.astype(jnp.float32) * dt[..., None]).reshape(b, nc, chunk, h, p)
+    adt = (a * dt).reshape(b, nc, chunk, h)               # (b,c,l,h), <= 0
+    cums = jnp.cumsum(adt, axis=2)                        # (b,c,l,h)
+    b_c = bmat.astype(jnp.float32).reshape(b, nc, chunk, n)
+    c_c = cmat.astype(jnp.float32).reshape(b, nc, chunk, n)
+
+    # within-chunk ("attention-like") term
+    cb = jnp.einsum("bcln,bcsn->bcls", c_c, b_c)          # (b,c,l,l)
+    ct = jnp.moveaxis(cums, -1, 2)                        # (b,c,h,l)
+    diff = ct[..., :, None] - ct[..., None, :]            # (b,c,h,l,l)
+    li = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(li, jnp.exp(diff), 0.0)
+    y_diag = jnp.einsum("bchls,bcls,bcshp->bclhp", decay, cb, x_dt)
+
+    # chunk states + sequential inter-chunk recurrence
+    decay_states = jnp.exp(cums[:, :, -1:, :] - cums)     # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", b_c, decay_states, x_dt)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])              # (b,c,h)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                                 # emit pre-chunk
+
+    final, prev = jax.lax.scan(
+        step, jnp.zeros((b, h, p, n), jnp.float32),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states_prev = jnp.moveaxis(prev, 0, 1)                # (b,c,h,p,n)
+
+    out_decay = jnp.exp(cums)                             # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", c_c, states_prev, out_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def _project(p: dict, x: jax.Array):
+    z = x @ p["w_z"]
+    xc = x @ p["w_x"]
+    bmat = x @ p["w_B"]
+    cmat = x @ p["w_C"]
+    dt = x @ p["w_dt"]
+    return z, xc, bmat, cmat, dt
+
+
+def mamba2_train(p: dict, x: jax.Array, *, n_heads: int, head_dim: int,
+                 d_state: int, norm_eps: float,
+                 chunk: int = SSD_CHUNK):
+    """x: (B,S,d_model) -> (y (B,S,d_model), final_state, conv_tail)."""
+    d_inner = n_heads * head_dim
+    z, xc_in, b_in, c_in, dt = _project(p, x)
+    xc = jax.nn.silu(causal_conv1d(xc_in, p["conv_x"], p["conv_bx"]))
+    bmat = jax.nn.silu(causal_conv1d(b_in, p["conv_B"], p["conv_bB"]))
+    cmat = jax.nn.silu(causal_conv1d(c_in, p["conv_C"], p["conv_bC"]))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    x_h = xc.reshape(*xc.shape[:2], n_heads, head_dim)
+    y, final = ssd_chunked(x_h, dtp, a, bmat, cmat, chunk)
+    y = y + p["D"][None, None, :, None] * x_h
+    y = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], norm_eps)
+    k = p["conv_x"].shape[0]
+    conv_tail = jnp.concatenate(
+        [xc_in, b_in, c_in], axis=-1)[:, -(k - 1):, :]    # decode conv window
+    return y @ p["w_out"], final, conv_tail
+
+
+def mamba2_decode(p: dict, x1: jax.Array, ssm_state, conv_state, *,
+                  n_heads: int, head_dim: int, d_state: int,
+                  norm_eps: float):
+    """x1: (B,1,d_model); ssm_state: (B,H,P,N) fp32; conv_state: (B,K-1,C)
+    with C = d_inner + 2*d_state (x|B|C pre-conv inputs).
+
+    Returns (y (B,1,d_model), ssm_state, conv_state).
+    """
+    d_inner = n_heads * head_dim
+    z, xc_in, b_in, c_in, dt = _project(p, x1[:, 0])
+    new_in = jnp.concatenate([xc_in, b_in, c_in], axis=-1)
+    window = jnp.concatenate(
+        [conv_state, new_in[:, None, :].astype(conv_state.dtype)], axis=1)
+    conv_state = window[:, 1:]
+    wx, wb, wc = (window[..., :d_inner],
+                  window[..., d_inner:d_inner + d_state],
+                  window[..., d_inner + d_state:])
+    xc = jax.nn.silu(conv1d_step(wx, p["conv_x"], p["conv_bx"]))
+    bvec = jax.nn.silu(conv1d_step(wb, p["conv_B"], p["conv_bB"]))
+    cvec = jax.nn.silu(conv1d_step(wc, p["conv_C"], p["conv_bC"]))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dtp * a)                                          # (B,H)
+    x_h = xc.reshape(-1, n_heads, head_dim).astype(jnp.float32)
+    ssm_state = (ssm_state * da[..., None, None]
+                 + jnp.einsum("bh,bhp,bn->bhpn", dtp, x_h, bvec))
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, cvec)
+    y = y + p["D"][None, :, None] * x_h
+    y = y.reshape(-1, 1, d_inner).astype(x1.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, None, :]), p["norm"], norm_eps)
+    return y @ p["w_out"], ssm_state, conv_state

@@ -1,0 +1,75 @@
+"""AdamW on ZeRO-scattered leaves (mixed precision).
+
+Optimizer state lives on the reduce-scattered gradient chunks (ZeRO-1): for
+each parameter leaf with a scatterable dim, this rank holds a 1/n_dp slice
+of fp32 master / m / v; leaves with no scatterable dim (norm scales, biases)
+keep replicated state. The INC reduce-scatter delivers exactly this rank's
+chunk of the gradient sum — "the network computes and delivers only your
+part" — and the updated bf16 leaf is rebuilt by the INC all-gather.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def init_leaf_state(master: jax.Array) -> dict:
+    """master: fp32 (scattered) copy of one param leaf."""
+    return {"master": master,
+            "m": jnp.zeros_like(master),
+            "v": jnp.zeros_like(master)}
+
+
+def decay_mask(leaf: jax.Array) -> bool:
+    return leaf.ndim >= 2      # no weight decay on norms/biases/scalars
+
+
+def adamw_leaf(state: dict, grad: jax.Array, *, lr, cfg: AdamWConfig,
+               step: jax.Array, wd_on: bool) -> dict:
+    g = grad.astype(jnp.float32)
+    m = cfg.b1 * state["m"] + (1 - cfg.b1) * g
+    v = cfg.b2 * state["v"] + (1 - cfg.b2) * jnp.square(g)
+    t = step.astype(jnp.float32) + 1.0
+    mhat = m / (1 - cfg.b1 ** t)
+    vhat = v / (1 - cfg.b2 ** t)
+    upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+    if wd_on:
+        upd = upd + cfg.weight_decay * state["master"]
+    master = state["master"] - lr * upd
+    return {"master": master, "m": m, "v": v}
+
+
+def global_norm_sq_local(grads_leaves: list[jax.Array]) -> jax.Array:
+    """Sum of squares over this rank's (disjoint) scattered chunks."""
+    return sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+               for g in grads_leaves)
+
+
+def clip_factor(gnorm: jax.Array, max_norm: float) -> jax.Array:
+    return jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))

@@ -1,0 +1,379 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+  compute term    = dot_FLOPs / peak_FLOPs_per_chip           [s]
+  memory term     = HBM_bytes / HBM_bw_per_chip               [s]
+  collective term = wire_bytes_per_chip / ICI_link_bw         [s]
+
+Why not `compiled.cost_analysis()`: XLA's HloCostAnalysis counts each
+while-loop BODY once, and every layer scan / microbatch scan / ring hop in
+this framework is a while loop — it under-counts FLOPs by ~L x n_micro.
+Instead we parse the optimized (post-SPMD, per-device) HLO text ourselves:
+
+  - a symbol table maps every instruction to its shape;
+  - the call graph (while bodies with `known_trip_count` from
+    backend_config — emitted by XLA for canonical counted loops — plus
+    fusion/call/conditional edges) gives each computation an execution
+    multiplier;
+  - compute = sum over `dot` ops of 2 * out_elems * contracted_size
+    (MXU FLOPs; elementwise work is memory-bound and shows in the bytes
+    term);
+  - memory = sum over real ops (fusion/dot/reduce/copy/...) of operand +
+    output bytes — the standard post-fusion "one kernel reads operands,
+    writes outputs" HBM model;
+  - collectives use ring wire models:
+      all-reduce 2*B*(g-1)/g | all-gather out*(g-1)/g
+      reduce-scatter out*(g-1) | all-to-all B*(g-1)/g
+      collective-permute B               (g = replica group size).
+
+cost_analysis() numbers are still recorded as a cross-check (they equal
+ours when nothing is rolled).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops with no data movement of their own
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "while", "conditional", "call", "partition-id",
+    "replica-id", "opt-barrier",
+}
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+
+def _shape_elems(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+def _parse_module(hlo: str):
+    """-> (computations: name -> [Instr], entry_name, shapes: name -> type)."""
+    comps: dict[str, list[Instr]] = {}
+    shapes: dict[str, str] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "=" not in stripped.split("(")[0]:
+            m = re.match(r"(ENTRY\s+)?%?([\w\.\-]+)\s*\(", stripped)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, opcode = m.groups()
+            inst = Instr(name, type_str, opcode, stripped)
+            comps[cur].append(inst)
+            shapes[name] = type_str
+        else:
+            # parameters inside computations: "%p = f32[..] parameter(0)"
+            m2 = re.match(r"^\s*%([\w\.\-]+)\s*=\s*(.+?)\s+parameter",
+                          line)
+            if m2:
+                shapes[m2.group(1)] = m2.group(2)
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry, shapes
+
+
+def _trip_count(line: str, comps, cond_name: str | None) -> int:
+    m = re.search(r'known_trip_count[^}]*?"n":"(\d+)"', line)
+    if m:
+        return int(m.group(1))
+    if cond_name and cond_name in comps:       # fallback: `i < const`
+        const = None
+        for inst in comps[cond_name]:
+            m2 = re.search(r"constant\((\d+)\)", inst.line)
+            if m2:
+                const = int(m2.group(1))
+        if const is not None:
+            return const
+    return 1
+
+
+def _multipliers(comps, entry) -> tuple[dict[str, int], set[str]]:
+    """Execution multipliers per computation + the set of computations that
+    are FUSION BODIES (their instructions run in-register: they contribute
+    FLOPs but no HBM traffic — the fusion op's external operands/output
+    already account for the memory)."""
+    calls: dict[str, list[tuple[str, int, bool]]] = {c: [] for c in comps}
+    for name, instrs in comps.items():
+        for inst in instrs:
+            ln = inst.line
+            if inst.opcode == "while":
+                m = re.search(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)",
+                              ln)
+                if m:
+                    trips = _trip_count(ln, comps, m.group(1))
+                    calls[name].append((m.group(2), trips, False))
+                continue
+            fused = inst.opcode == "fusion" or "to_apply=" in ln
+            for attr in ("calls", "to_apply"):
+                m = re.search(rf"{attr}=%?([\w\.\-]+)", ln)
+                if m and m.group(1) in comps:
+                    calls[name].append((m.group(1), 1, fused))
+            m = re.search(r"branch_computations=\{([^}]*)\}", ln)
+            if m:
+                for b in m.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b in comps:
+                        calls[name].append((b, 1, False))
+    mult: dict[str, int] = {}
+    fusion_bodies: set[str] = set()
+
+    def walk(name: str, m: int, in_fusion: bool, depth=0):
+        if depth > 60:
+            return
+        mult[name] = mult.get(name, 0) + m
+        if in_fusion:
+            fusion_bodies.add(name)
+        for callee, k, fused in calls.get(name, []):
+            walk(callee, m * k, in_fusion or fused, depth + 1)
+
+    walk(entry, 1, False)
+    return mult, fusion_bodies
+
+
+def _operands(line: str) -> list[str]:
+    inner = line.split("(", 1)[1]
+    # stop at the matching close of the operand list: cut at "), " attrs
+    depth, end = 1, len(inner)
+    for i, ch in enumerate(inner):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w\.\-]+)", inner[:end])
+
+
+def _dot_flops(inst: Instr, shapes) -> float:
+    out_elems = _shape_elems(inst.type_str)
+    ops = _operands(inst.line)
+    if not ops:
+        return 0.0
+    lhs_shape = shapes.get(ops[0], "")
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+    dims_m = _SHAPE_RE.findall(lhs_shape)
+    if not m or not dims_m:
+        return 2.0 * out_elems            # conservative
+    dims = [d for d in dims_m[0][1].split(",") if d]
+    contract = 1
+    for ix in m.group(1).split(","):
+        if ix and int(ix) < len(dims):
+            contract *= int(dims[int(ix)])
+    return 2.0 * out_elems * contract
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    computation: str
+    out_bytes: int
+    group_size: int
+    multiplier: int = 1
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        scale = (g - 1) / g if g > 1 else 0.0
+        if self.kind == "collective-permute":
+            w = self.out_bytes
+        elif self.kind == "all-reduce":
+            w = 2 * self.out_bytes * scale
+        elif self.kind == "reduce-scatter":
+            w = self.out_bytes * (g - 1)       # input = out * g
+        else:          # all-gather (out = full) / all-to-all
+            w = self.out_bytes * scale
+        return w * self.multiplier
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    if "source_target_pairs=" in line:
+        return 2
+    return 1
+
+
+@dataclass
+class Roofline:
+    flops: float                  # per-device dot FLOPs (trip-count aware)
+    hbm_bytes: float              # per-device modeled HBM traffic
+    wire_bytes: float             # per-device modeled ICI traffic
+    raw_collective_bytes: float   # unweighted operand-size sum (spec metric)
+    n_collectives: int
+    xla_flops: float = 0.0        # cost_analysis cross-check (body-once)
+    xla_bytes: float = 0.0
+    per_kind: dict = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def summary(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "wire_bytes_per_dev": self.wire_bytes,
+            "raw_collective_bytes": self.raw_collective_bytes,
+            "n_collectives": self.n_collectives,
+            "xla_flops": self.xla_flops, "xla_bytes": self.xla_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "per_kind": {k: round(v) for k, v in self.per_kind.items()},
+        }
+
+
+def analyze_hlo(hlo: str, skip_scopes: tuple = (),
+                extra_hbm_bytes: float = 0.0) -> Roofline:
+    """skip_scopes: named_scope substrings whose instructions lower a
+    VMEM-resident Pallas kernel on TPU — their CPU-oracle HBM lines are
+    skipped (dot FLOPs still counted) and replaced by `extra_hbm_bytes`,
+    the kernel's analytic traffic model (see roofline/flash_model.py)."""
+    comps, entry, shapes = _parse_module(hlo)
+    mult, fusion_bodies = _multipliers(comps, entry)
+
+    flops = 0.0
+    hbm = 0.0
+    wire = 0.0
+    raw = 0.0
+    n_coll = 0
+    per_kind: dict[str, float] = {}
+
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for inst in instrs:
+            op = inst.opcode
+            if op in _FREE_OPS:
+                continue
+            is_coll = None
+            for kind in _COLLECTIVES:
+                if op == kind or op == kind + "-start":
+                    is_coll = kind
+                    break
+            if is_coll:
+                out_b = _shape_bytes(inst.type_str)
+                cop = CollectiveOp(kind=is_coll, computation=cname,
+                                   out_bytes=out_b,
+                                   group_size=_group_size(inst.line),
+                                   multiplier=m)
+                wire += cop.wire_bytes
+                raw += out_b * m
+                n_coll += 1
+                per_kind[is_coll] = per_kind.get(is_coll, 0.0) \
+                    + cop.wire_bytes
+                hbm += out_b * 2 * m          # collectives touch HBM too
+                continue
+            if op.endswith("-done"):
+                continue
+            if op == "dot":
+                flops += _dot_flops(inst, shapes) * m
+            elif op == "convolution":
+                flops += 2.0 * _shape_elems(inst.type_str) * 128 * m
+            if in_fusion:
+                continue          # in-register: no HBM traffic of its own
+            if skip_scopes and any(sc in inst.line for sc in skip_scopes):
+                continue          # Pallas-kernel region: analytic bytes
+            out_b = _shape_bytes(inst.type_str)
+            in_b = sum(_shape_bytes(shapes.get(o, ""))
+                       for o in _operands(inst.line))
+            hbm += (out_b + in_b) * m
+
+    return Roofline(flops=flops, hbm_bytes=hbm + extra_hbm_bytes,
+                    wire_bytes=wire,
+                    raw_collective_bytes=raw, n_collectives=n_coll,
+                    per_kind=per_kind)
+
+
+def analyze(compiled, skip_scopes: tuple = (),
+            extra_hbm_bytes: float = 0.0) -> Roofline:
+    roof = analyze_hlo(compiled.as_text(), skip_scopes, extra_hbm_bytes)
+    cost = dict(compiled.cost_analysis() or {})
+    roof.xla_flops = float(cost.get("flops", 0.0))
+    roof.xla_bytes = float(cost.get("bytes accessed", 0.0))
+    return roof
+
+
+def model_flops(n_params: int, n_active: int, kind: str, tokens: int) -> float:
+    """MODEL_FLOPS: 6ND train / 2ND inference, N = active params."""
+    return (6.0 if kind == "train" else 2.0) * n_active * tokens

@@ -1,0 +1,62 @@
+"""Analytic HBM-traffic model for the Pallas flash-attention kernel.
+
+The CPU dry-run lowers the flash oracle (same math, HBM-materialized); on
+TPU the Pallas kernel (kernels/flash_attn.py) keeps running softmax state
+in VMEM, so its true HBM traffic per attention layer is
+
+  fwd:  q + o + n_q_blocks * (k + v)     (k/v re-streamed per q block)
+  train (remat): ~4.5x fwd               (recompute-fwd + bwd dq/dk/dv)
+
+The roofline analyzer skips the oracle's in-scope byte lines and adds this
+model instead (analysis.analyze(extra_hbm_bytes=...)). Block size matches
+the kernel default (512).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.kernels.flash_attn import DEFAULT_BLOCK_Q
+
+TRAIN_FACTOR = 4.5       # recomputed fwd + backward passes
+BYTES = 2                # bf16
+
+
+def flashed_layers(cfg: ArchConfig) -> tuple[int, int]:
+    """(full-context, sliding-window) blocks routed through the kernel."""
+    n_full = n_local = 0
+    for pat, r in cfg.pattern_groups:
+        for bt in pat:
+            if bt in ("global", "moe", "selfcross"):
+                n_full += r
+            elif bt == "local":
+                n_local += r
+    return n_full, n_local
+
+
+def flash_traffic_bytes(cfg: ArchConfig, shape: ShapeConfig, *,
+                        n_micro: int, n_dp: int, n_model: int) -> float:
+    """Per-device HBM bytes per step attributable to flashed attention."""
+    n_full, n_local = flashed_layers(cfg)
+    if (n_full + n_local) == 0 or shape.kind == "decode":
+        return 0.0
+    s = shape.seq_len
+    b_loc = max(shape.global_batch // n_dp, 1)
+    if shape.kind == "train":
+        b_loc = max(b_loc // n_micro, 1)
+    h = cfg.n_heads if cfg.n_heads % n_model else cfg.n_heads // n_model
+    kv = (cfg.n_kv_heads if cfg.n_kv_heads % n_model
+          else cfg.n_kv_heads // n_model)
+    d = cfg.hd
+    q = b_loc * s * h * d * BYTES
+    o = q
+    nq = max(s // DEFAULT_BLOCK_Q, 1)
+    factor = TRAIN_FACTOR if shape.kind == "train" else 1.0
+    # full-context: each q block streams the whole K/V
+    kvb = b_loc * s * kv * d * BYTES * 2
+    fwd_full = q + o + nq * kvb
+    # sliding-window: each q block streams only (window + block) tokens
+    kvb_win = b_loc * (cfg.window + DEFAULT_BLOCK_Q) * kv * d * BYTES * 2
+    fwd_local = q + o + nq * kvb_win
+    total = (fwd_full * n_full + fwd_local * n_local) * factor
+    if shape.kind == "train":
+        total *= n_micro
+    return total

@@ -1,0 +1,39 @@
+"""CntFwd host-level primitives: threshold counters, test&set, ballots."""
+import numpy as np
+
+from repro.core.agreement import CntFwd
+from repro.core.inc_map import ServerAgent, SwitchMemory
+
+
+def make_server():
+    return ServerAgent(SwitchMemory(2, 64), gaid=1, n_slots=16)
+
+
+def test_threshold_forwarding():
+    cf = CntFwd(server=make_server(), threshold=3)
+    assert not cf.offer(7)
+    assert not cf.offer(7)
+    assert cf.offer(7)           # exactly at threshold: forward
+    assert not cf.offer(7)       # already delivered
+
+
+def test_test_and_set_lock():
+    cf = CntFwd(server=make_server(), threshold=1)
+    assert cf.test_and_set(5)    # first caller wins
+    assert not cf.test_and_set(5)
+    cf.release(5)
+    assert cf.test_and_set(5)    # re-acquirable after release
+
+
+def test_concurrent_ballots_independent():
+    cf = CntFwd(server=make_server(), threshold=2)
+    assert not cf.offer(1)
+    assert not cf.offer(2)
+    assert cf.offer(1)
+    assert cf.offer(2)
+
+
+def test_vote_weights():
+    cf = CntFwd(server=make_server(), threshold=5)
+    assert not cf.offer(9, votes=2)
+    assert cf.offer(9, votes=3)

@@ -1,0 +1,66 @@
+"""Multi-application data plane: registration, partitions, timeouts."""
+import numpy as np
+import pytest
+
+from repro.core.channel import Controller
+from repro.core.netfilter import NetFilter
+
+
+def nf(name, **kw):
+    return NetFilter.from_dict({"AppName": name, **kw})
+
+
+def test_register_and_lookup():
+    c = Controller()
+    ch = c.register(nf("app-1", addTo="R.kvs"))
+    assert c.lookup("app-1") is ch
+    assert ch.app_type == "AsyncAgtr"
+    with pytest.raises(ValueError):
+        c.register(nf("app-1"))
+
+
+def test_partitions_are_fcfs_and_isolated():
+    c = Controller()
+    a = c.register(nf("a", addTo="R.kvs"), n_slots=100)
+    b = c.register(nf("b", addTo="R.kvs"), n_slots=100)
+    assert a.server.base != b.server.base
+    a.client().addto({"k": 1})
+    b.client().addto({"k": 5})
+    assert a.client().read("k") == 1       # same key, separate partitions
+    assert b.client().read("k") == 5
+
+
+def test_release_frees_name_and_memory():
+    c = Controller()
+    ch = c.register(nf("a"), n_slots=100)
+    tail = c.switch._next_free
+    ch.close()
+    assert "a" not in c.by_name
+    assert c.switch._next_free < tail
+
+
+def test_two_level_timeout_reclaim():
+    c = Controller(t1=10.0, t2=30.0)
+    ch = c.register(nf("stale", addTo="R.kvs"))
+    cl = ch.client()
+    cl.addto({"x": 42})
+    assert c.poll() == []                  # fresh
+    c.advance(11)
+    events = c.poll()
+    assert events == [(ch.gaid, 1)]        # level 1: retrieved to server
+    assert ch.server.mapping == {}         # registers pulled back
+    assert cl.read("x") == 42              # value intact on the host
+    c.advance(25)
+    events = c.poll()
+    assert events == [(ch.gaid, 2)]        # level 2: delivered + released
+    assert "stale" not in c.by_name
+    assert any(v == 42 for v in c.delivered[ch.gaid].values())
+
+
+def test_touch_resets_timeout():
+    c = Controller(t1=10.0, t2=30.0)
+    ch = c.register(nf("busy"))
+    c.advance(8)
+    ch.touch()
+    c.advance(8)
+    assert c.poll() == []                  # touched at t=8: not stale at 16

@@ -1,0 +1,48 @@
+"""Map.clear policies: copy / shadow / lazy (paper §5.2.2, Table 6)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.clear_policy import make_clear_policy
+from repro.core.quantize import quantize
+
+
+@pytest.mark.parametrize("policy", ["copy", "shadow", "lazy"])
+def test_rounds_produce_identical_values(policy):
+    rng = np.random.RandomState(0)
+    pol = make_clear_policy(policy, 64)
+    for _ in range(5):
+        total = np.zeros(64, np.int64)
+        for _ in range(3):
+            q = rng.randint(-1000, 1000, 64).astype(np.int32)
+            total += q
+            pol.addto(jnp.asarray(q))
+        out = np.asarray(pol.read_and_clear())
+        np.testing.assert_array_equal(out, total.astype(np.int32))
+
+
+def test_memory_multipliers_match_table6():
+    assert make_clear_policy("copy", 4).stats.memory_multiplier == 1
+    assert make_clear_policy("shadow", 4).stats.memory_multiplier == 2
+    assert make_clear_policy("lazy", 4).stats.memory_multiplier == 1
+
+
+def test_lazy_overflow_triggers_fallback_reset():
+    pol = make_clear_policy("lazy", 4)
+    big = quantize(jnp.full((4,), 3.0e9), 0)   # saturates to sentinel
+    pol.addto(big)
+    out = pol.read_and_clear()
+    assert pol.stats.fallback_resets == 1
+    assert np.all(np.asarray(pol.acc) == 0)    # switch memory reset
+
+
+def test_lazy_monotone_between_clears():
+    pol = make_clear_policy("lazy", 2)
+    pol.addto(jnp.asarray([1, 2], jnp.int32))
+    a = np.asarray(pol.read_and_clear())
+    pol.addto(jnp.asarray([3, 4], jnp.int32))
+    b = np.asarray(pol.read_and_clear())
+    np.testing.assert_array_equal(a, [1, 2])
+    np.testing.assert_array_equal(b, [3, 4])   # delta, not cumulative
+    # but the underlying accumulator never cleared
+    assert np.all(np.asarray(pol.acc) == np.asarray([4, 6]))

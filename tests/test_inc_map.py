@@ -1,0 +1,98 @@
+"""INC map: key hashing, logical->physical grants, eviction, fallback."""
+import numpy as np
+import pytest
+
+from repro.core.inc_map import (CACHE_POLICIES, ClientAgent, ServerAgent,
+                                SwitchMemory, hash_key)
+
+
+def make_agent(policy="netrpc-lru", capacity=8, window=64):
+    sw = SwitchMemory(n_segments=2, seg_slots=64)
+    return ServerAgent(sw, gaid=1, n_slots=capacity, policy=policy,
+                       window=window)
+
+
+def test_hash_is_stable_32bit():
+    assert hash_key("hello") == hash_key("hello")
+    assert 0 <= hash_key("hello") < 2**32
+    assert hash_key(12345) == 12345
+    assert hash_key(2**40 + 7) == (2**40 + 7) & 0xFFFFFFFF
+
+
+def test_addto_and_read_through_switch():
+    srv = make_agent()
+    srv.addto_batch(np.array([10, 11], np.uint32), np.array([5, 7]))
+    srv.addto_batch(np.array([10], np.uint32), np.array([3]))
+    assert srv.read(10) == 8 and srv.read(11) == 7
+
+
+def test_miss_then_grant_then_hit():
+    srv = make_agent(capacity=4)
+    srv.addto_batch(np.array([1], np.uint32), np.array([1]))   # miss+grant
+    assert srv.misses == 1
+    srv.addto_batch(np.array([1], np.uint32), np.array([1]))   # hit
+    assert srv.hits == 1
+    assert srv.read(1) == 2          # spill + register merge
+
+
+def test_capacity_exhaustion_falls_back_to_host():
+    srv = make_agent(policy="fcfs", capacity=2)
+    for k in range(5):
+        srv.addto_batch(np.array([k], np.uint32), np.array([k + 1]))
+    # all values still readable (host spill is the fallback)
+    for k in range(5):
+        assert srv.read(k) == k + 1
+    assert len(srv.mapping) == 2     # only 2 got switch slots
+
+
+def test_lru_evicts_cold_keys_without_value_loss():
+    srv = make_agent(policy="netrpc-lru", capacity=2, window=8)
+    srv.addto_batch(np.array([1, 2], np.uint32), np.array([10, 20]))
+    assert set(srv.mapping) == {1, 2}
+    # hot traffic on 3,4 for a full window forces eviction of 1,2
+    for _ in range(4):
+        srv.addto_batch(np.array([3, 4], np.uint32), np.array([1, 1]))
+    assert set(srv.mapping) == {3, 4}
+    assert srv.read(1) == 10 and srv.read(2) == 20   # retrieved, not lost
+    assert srv.read(3) == 4 and srv.read(4) == 4
+
+
+@pytest.mark.parametrize("policy", CACHE_POLICIES)
+def test_all_policies_preserve_values(policy):
+    srv = make_agent(policy=policy, capacity=4, window=16)
+    rng = np.random.RandomState(0)
+    truth = {}
+    for _ in range(50):
+        k = int(rng.zipf(1.5)) % 20
+        v = int(rng.randint(1, 10))
+        truth[k] = truth.get(k, 0) + v
+        srv.addto_batch(np.array([k], np.uint32), np.array([v]))
+    for k, v in truth.items():
+        assert srv.read(k) == v, (policy, k)
+
+
+def test_client_collision_bypasses_inc():
+    srv = make_agent()
+    cl = ClientAgent(srv)
+    # force a collision by monkeypatching two keys to one logical addr
+    l = cl.logical("a")
+    cl.key_of[hash_key("b")] = "a"          # pretend "b" hashes like "a"
+    cl.collisions["b"] = hash_key("b")
+    assert cl.logical("b") is None          # routed via host payload path
+
+
+def test_retrieve_all_moves_registers_to_host():
+    srv = make_agent(capacity=4)
+    srv.addto_batch(np.array([1, 2], np.uint32), np.array([5, 6]))
+    srv.retrieve_all()
+    assert srv.mapping == {}
+    assert srv.read(1) == 5 and srv.read(2) == 6
+
+
+def test_fcfs_partition_reservation():
+    sw = SwitchMemory(n_segments=2, seg_slots=64)
+    assert sw.reserve(1, 100)
+    assert sw.reserve(2, 28)
+    assert not sw.reserve(3, 1)              # full
+    sw.release(2)
+    assert sw.reserve(3, 28)                 # tail reuse

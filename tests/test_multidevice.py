@@ -1,0 +1,38 @@
+"""Launch the multi-device integration scripts as subprocesses (each needs
+its own jax initialized with forced host devices; the main pytest process
+keeps the real single device)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+MD = Path(__file__).parent / "multidevice"
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_script(name: str, sentinel: str, timeout: int = 1500) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    p = subprocess.run([sys.executable, str(MD / name)], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert p.returncode == 0, f"{name} failed:\n{p.stdout}\n{p.stderr}"
+    assert sentinel in p.stdout, p.stdout
+    return p.stdout
+
+
+@pytest.mark.slow
+def test_ring_collectives():
+    run_script("md_ring.py", "MD_RING_PASS")
+
+
+@pytest.mark.slow
+def test_train_mode_equivalence():
+    run_script("md_train_equiv.py", "MD_TRAIN_PASS")
+
+
+@pytest.mark.slow
+def test_decode_sharding_equivalence():
+    run_script("md_decode.py", "MD_DECODE_PASS")

@@ -1,0 +1,57 @@
+"""NetFilter parsing/validation + Table-1 app-type classification."""
+import json
+
+import pytest
+
+from repro.core.netfilter import CntFwdSpec, NetFilter
+
+
+def test_paper_example_fig3(tmp_path):
+    nf_json = {
+        "AppName": "DT-1", "Precision": 8,
+        "get": "AgtrGrad.tensor", "addTo": "NewGrad.tensor",
+        "clear": "copy", "modify": "nop",
+        "CntFwd": {"to": "ALL", "threshold": 2, "key": "ClientID"},
+    }
+    p = tmp_path / "agtr.nf"
+    p.write_text(json.dumps(nf_json))
+    nf = NetFilter.load(p)
+    assert nf.app_name == "DT-1" and nf.precision == 8
+    assert nf.scale == 1e8
+    assert nf.cnt_fwd.enabled and nf.cnt_fwd.to == "ALL"
+    assert nf.app_type() == "SyncAgtr"
+    assert nf.to_dict()["addTo"] == "NewGrad.tensor"
+
+
+def test_app_type_classification():
+    base = dict(AppName="x", Precision=0)
+    async_agtr = NetFilter.from_dict(
+        {**base, "addTo": "Req.kvs", "CntFwd": {"to": "SRC"}})
+    assert async_agtr.app_type() == "AsyncAgtr"
+    keyvalue = NetFilter.from_dict({**base, "get": "Reply.kvs"})
+    assert keyvalue.app_type() == "KeyValue"
+    agreement = NetFilter.from_dict(
+        {**base, "CntFwd": {"to": "SRC", "threshold": 1, "key": "L.kvs"}})
+    assert agreement.app_type() == "Agreement"
+    sync = NetFilter.from_dict(
+        {**base, "addTo": "A.t", "get": "B.t", "clear": "copy"})
+    assert sync.app_type() == "SyncAgtr"
+
+
+@pytest.mark.parametrize("bad", [
+    {"AppName": "x", "Precision": 11},
+    {"AppName": "bad name!"},
+    {"AppName": "x", "clear": "wipe"},
+    {"AppName": "x", "modify": {"op": "divide"}},
+    {"AppName": "x", "CntFwd": {"to": "EVERYONE"}},
+    {"AppName": "x", "unknown_field": 1},
+])
+def test_validation_rejects(bad):
+    with pytest.raises((ValueError, KeyError)):
+        NetFilter.from_dict(bad)
+
+
+def test_cntfwd_threshold_one_is_test_and_set():
+    nf = NetFilter.from_dict({"AppName": "lock", "CntFwd":
+                              {"to": "SRC", "threshold": 1, "key": "k"}})
+    assert nf.cnt_fwd.enabled and nf.cnt_fwd.threshold == 1

@@ -1,0 +1,87 @@
+"""HLO-text roofline analyzer: trip counts, dot FLOPs, collective models."""
+import pytest
+
+from repro.roofline import analysis
+
+HLO = """\
+HloModule test
+
+%body.1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %g = f32[128,256]{1,0} get-tuple-element(%p), index=1
+  %cp = f32[128,256]{1,0} collective-permute(%g), source_target_pairs={{0,1},{1,0}}
+  %d = f32[128,128]{1,0} dot(%cp, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[128,256]) tuple(%i, %cp)
+}
+
+%cond.1 (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(15)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%fused_computation.1 (a: f32[64,64], b: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64] parameter(0)
+  %b = f32[64,64] parameter(1)
+  ROOT %m = f32[64,64]{1,0} multiply(%a, %b)
+}
+
+ENTRY %main (x: f32[128,256], w: f32[256,128]) -> f32[128,256] {
+  %x = f32[128,256]{1,0} parameter(0)
+  %w = f32[256,128]{1,0} parameter(1)
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups=[4,2]<=[8], to_apply=%add
+  %wh = (s32[], f32[128,256]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"15"}}
+  %fu = f32[64,64]{1,0} fusion(%x, %w), kind=kLoop, calls=%fused_computation.1
+  %ag = f32[512,256]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %out = f32[128,256]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert analysis._shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert analysis._shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert analysis._shape_bytes("s32[]") == 4
+
+
+def test_trip_count_and_collectives():
+    r = analysis.analyze_hlo(HLO)
+    # collective-permute inside while runs 15x: wire = 15 * 128*256*4
+    assert r.per_kind["collective-permute"] == 15 * 128 * 256 * 4
+    # all-reduce group size 2: 2 * B * (1/2)
+    assert r.per_kind["all-reduce"] == 2 * (128 * 256 * 4) * 0.5
+    # all-gather out 512x256 over g=4: out * 3/4
+    assert r.per_kind["all-gather"] == 512 * 256 * 4 * 0.75
+    assert r.n_collectives == 3
+
+
+def test_dot_flops_trip_aware():
+    r = analysis.analyze_hlo(HLO)
+    # dot out (128,128) contract 256, executed 15x
+    assert r.flops == 15 * 2 * 128 * 128 * 256
+
+
+def test_fusion_body_not_double_counted():
+    r = analysis.analyze_hlo(HLO)
+    # fusion external IO counted once; internal multiply contributes no bytes
+    fusion_io = (128 * 256 * 4) + (256 * 128 * 4) + (64 * 64 * 4)
+    assert r.hbm_bytes >= fusion_io
+
+
+def test_wire_models():
+    op = analysis.CollectiveOp("reduce-scatter", "c", out_bytes=100,
+                               group_size=4)
+    assert op.wire_bytes == 300            # input = 400, sends 3/4 of it
+    op = analysis.CollectiveOp("all-reduce", "c", out_bytes=100,
+                               group_size=4)
+    assert op.wire_bytes == 150
+    op = analysis.CollectiveOp("collective-permute", "c", out_bytes=100,
+                               group_size=2, multiplier=3)
+    assert op.wire_bytes == 300
+
+
+def test_dominant_term():
+    r = analysis.Roofline(flops=197e12, hbm_bytes=0, wire_bytes=0,
+                          raw_collective_bytes=0, n_collectives=0)
+    assert r.dominant == "compute" and r.compute_s == pytest.approx(1.0)

@@ -1,0 +1,89 @@
+"""RPCLayer: the four INC app types through Service/Stub (paper Tab. 1)."""
+import numpy as np
+import pytest
+
+from repro.core.netfilter import NetFilter
+from repro.core.rpc import Field, NetRPC, Service
+
+
+def nf(d):
+    return NetFilter.from_dict(d)
+
+
+def test_sync_agtr_gradient_aggregation():
+    """Fig. 2/3: two clients push tensors; CntFwd(threshold=2) gates the
+    aggregated reply; values are fixed-point at Precision=4."""
+    svc = Service("Gradient")
+    svc.rpc("Update",
+            [Field("tensor", "FPArray")], [Field("tensor", "FPArray")],
+            nf({"AppName": "DT-1", "Precision": 4,
+                "get": "AgtrGrad.tensor", "addTo": "NewGrad.tensor",
+                "clear": "copy", "modify": "nop",
+                "CntFwd": {"to": "ALL", "threshold": 2, "key": "ClientID"}}))
+    rt = NetRPC()
+    c1 = rt.make_stub(svc)
+    c2 = rt.make_stub(svc)
+    g1 = np.array([0.5, -1.25, 2.0])
+    g2 = np.array([1.5, 0.25, -1.0])
+    r1 = c1.call("Update", {"tensor": g1})
+    assert r1 == {}                        # below threshold: dropped
+    r2 = c2.call("Update", {"tensor": g2})
+    got = np.array([r2["tensor"][i] for i in range(3)])
+    np.testing.assert_allclose(got, g1 + g2, atol=1e-4)
+
+
+def test_async_agtr_mapreduce_wordcount():
+    svc = Service("MapReduce")
+    svc.rpc("ReduceByKey", [Field("kvs", "STRINTMap")], [Field("msg")],
+            nf({"AppName": "MR-1", "addTo": "ReduceRequest.kvs"}))
+    svc.rpc("Query", [Field("msg")], [Field("kvs", "STRINTMap")],
+            nf({"AppName": "MR-1", "get": "QueryReply.kvs"}))
+    rt = NetRPC()
+    stub = rt.make_stub(svc)
+    stub.call("ReduceByKey", {"kvs": {"the": 3, "fox": 1}})
+    stub.call("ReduceByKey", {"kvs": {"the": 2, "dog": 1}})
+    out = stub.call("Query", {"kvs": {"the": 0, "fox": 0, "dog": 0}})
+    assert out["kvs"]["the"] == 5
+    assert out["kvs"]["fox"] == 1 and out["kvs"]["dog"] == 1
+
+
+def test_keyvalue_monitoring_counters():
+    svc = Service("Monitor")
+    svc.rpc("MonitorCall", [Field("kvs", "STRINTMap"), Field("payload")],
+            [Field("payload")],
+            nf({"AppName": "MON-1", "addTo": "MonitorRequest.kvs"}))
+    rt = NetRPC()
+    rt.server.register("MonitorCall", lambda req: {"payload": "ok"})
+    stub = rt.make_stub(svc)
+    for _ in range(7):
+        r = stub.call("MonitorCall", {"kvs": {"flow-a": 1}, "payload": "hi"})
+    assert r["payload"] == "ok"
+    assert stub.agents["MonitorCall"].read("flow-a") == 7
+
+
+def test_agreement_vote_counting_skips_server_until_quorum():
+    svc = Service("Vote")
+    svc.rpc("CastVote", [Field("kvs", "STRINTMap")], [Field("msg")],
+            nf({"AppName": "VOTE-1",
+                "CntFwd": {"to": "SRC", "threshold": 3, "key": "ballot"}}))
+    rt = NetRPC()
+    hits = []
+    rt.server.register("CastVote", lambda req: hits.append(1) or
+                       {"msg": "committed"})
+    stub = rt.make_stub(svc)
+    assert stub.call("CastVote", {"kvs": {"b1": 1}}) == {}
+    assert stub.call("CastVote", {"kvs": {"b1": 1}}) == {}
+    out = stub.call("CastVote", {"kvs": {"b1": 1}})
+    assert out["msg"] == "committed"
+    assert len(hits) == 1                  # server touched once (sub-RTT)
+
+
+def test_stream_modify_applied_to_request():
+    svc = Service("Mod")
+    svc.rpc("Push", [Field("kvs", "STRINTMap")], [Field("msg")],
+            nf({"AppName": "MOD-1", "addTo": "R.kvs",
+                "modify": {"op": "max", "para": 10}}))
+    rt = NetRPC()
+    stub = rt.make_stub(svc)
+    stub.call("Push", {"kvs": {"k": 3}})
+    assert stub.agents["Push"].read("k") == 10   # max(3, 10)
