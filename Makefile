@@ -1,0 +1,16 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test test-fast bench-batch
+
+# full tier-1 suite (includes the slow multidevice subprocess tests)
+test:
+	python -m pytest -q
+
+# fast lane: non-slow suite + delta vs the seed baseline
+test-fast:
+	bash scripts/ci.sh
+
+# batched RPC data-plane sweep (calls/sec vs batch size)
+bench-batch:
+	python benchmarks/agg_goodput.py --batch

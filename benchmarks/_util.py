@@ -5,6 +5,8 @@ import time
 
 import jax
 
+from repro import compat
+
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall time per call in microseconds (blocks on outputs)."""
@@ -21,5 +23,4 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def host_mesh(model: int = 2):
     n = len(jax.devices())
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((n // model, model), ("data", "model"))

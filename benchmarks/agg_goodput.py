@@ -5,8 +5,23 @@ SyncAgtr / AsyncAgtr goodput over the host-device data plane (8 devices,
 the derived column also reports modeled wire bytes, the
 hardware-independent quantity the roofline consumes). Voting and Monitor
 delays come from the host-level CntFwd / INC-map paths.
+
+``--batch`` runs the batched-RPC sweep instead: calls/sec of the
+Stub.call_batch data plane vs batch size (one sparse_addto kernel batch
+per flush instead of one device round trip per call):
+
+    PYTHONPATH=src python -m benchmarks.agg_goodput --batch
 """
 from __future__ import annotations
+
+if __package__ in (None, ""):            # executed as a bare script
+    import sys
+    from pathlib import Path
+    _root = Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))
+
+import time
 
 import numpy as np
 import jax
@@ -15,9 +30,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from benchmarks._util import host_mesh, timeit
 from repro.core import inc_agg
+from repro import compat
 from repro.core.agreement import CntFwd
 from repro.core.inc_agg import IncAggConfig
 from repro.core.inc_map import ServerAgent, SwitchMemory
+from repro.core.netfilter import NetFilter
+from repro.core.rpc import Field, NetRPC, Service
 
 L = 1 << 20      # 1M fp32 elements per rank
 
@@ -30,7 +48,7 @@ def _allreduce_fn(mesh, mode):
         out, _ = inc_agg.all_reduce(g, manual, cfg)
         return out
 
-    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(),
+    return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=P(),
                                  out_specs=P(), axis_names={"data"},
                                  check_vma=False))
 
@@ -80,3 +98,91 @@ def run():
     us = (_t.perf_counter() - t0) / 200 * 1e6
     rows.append(("t5/monitor_read_delay", round(us, 1), "per_read"))
     return rows
+
+
+# -- batched RPC data-plane sweep (ISSUE 1 tentpole) --------------------------
+
+KEYS_PER_CALL = 16
+
+
+def _batch_service() -> Service:
+    """Monitoring-style RPC with a vote counter: exercises the full request
+    pipeline the batch plane vectorizes — Map.addTo for the kvs stream plus
+    a CntFwd counter per call (ballot = the hottest flow key)."""
+    svc = Service("BatchBench")
+    svc.rpc("Push", [Field("kvs", "STRINTMap")], [Field("msg")],
+            NetFilter.from_dict({"AppName": "BB-1",
+                                 "addTo": "PushRequest.kvs",
+                                 "CntFwd": {"to": "SRC",
+                                            "threshold": 1 << 30,
+                                            "key": "PushRequest.kvs"}}))
+    return svc
+
+
+def _batch_requests(n_calls: int, seed: int = 0) -> list[dict]:
+    rng = np.random.RandomState(seed)
+    return [{"kvs": {f"flow-{int(k)}": 1
+                     for k in rng.zipf(1.3, KEYS_PER_CALL) % 2048}}
+            for _ in range(n_calls)]
+
+
+def run_batch(batch_sizes=(1, 4, 16, 64), n_calls: int = 256,
+              repeats: int = 5) -> list:
+    """calls/sec of the batched pipeline vs batch size, same total work.
+
+    Every sweep point replays the identical request stream on a fresh
+    runtime, chunked into call_batch(batch) groups; batch=1 is the
+    sequential Stub.call path (the N=1 special case of the same pipeline).
+    Each point reports the fastest of ``repeats`` timed replays (gc paused
+    during timing): min is the least-noise estimator on a shared/jittery
+    host, and both sweep points get the same treatment.
+    """
+    import gc
+    rows = []
+    base_cps = None
+    for bs in batch_sizes:
+        times = []
+        for rep in range(repeats):
+            svc = _batch_service()
+            rt = NetRPC()
+            stub = rt.make_stub(svc, n_slots=8192)
+            reqs = _batch_requests(n_calls)
+            # warm the jit caches (sparse_addto buckets) for this chunk size
+            for chunk in _chunks(_batch_requests(4 * bs, seed=1), bs):
+                stub.call_batch("Push", chunk)
+            gc.collect()
+            gc.disable()
+            try:
+                t0 = time.perf_counter()
+                for chunk in _chunks(reqs, bs):
+                    stub.call_batch("Push", chunk)
+                times.append(time.perf_counter() - t0)
+            finally:
+                gc.enable()
+        dt = min(times)
+        cps = n_calls / dt
+        base_cps = base_cps or cps
+        rows.append((f"t5/batch_sweep/bs{bs}",
+                     round(dt / n_calls * 1e6, 1),
+                     f"calls_per_sec={cps:.0f}"
+                     f" speedup_vs_bs1={cps / base_cps:.2f}x"))
+    return rows
+
+
+def _chunks(seq, n):
+    for i in range(0, len(seq), n):
+        yield seq[i:i + n]
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", action="store_true",
+                    help="run the batched-RPC calls/sec sweep")
+    args = ap.parse_args()
+    for row in (run_batch() if args.batch else run()):
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ from jax.sharding import PartitionSpec as P
 
 from benchmarks._util import host_mesh, timeit
 from repro.core import inc_agg
+from repro import compat
 from repro.core.inc_agg import IncAggConfig
 
 L = 1 << 18
@@ -29,7 +30,7 @@ def run():
         out, mask = inc_agg.all_reduce(g, ("data",), cfg)
         return out, mask
 
-    f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+    f = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
                               axis_names={"data"}, check_vma=False))
     rng = np.random.RandomState(0)
     for ratio in (0.0, 1e-5, 1e-4, 1e-3, 1e-2):

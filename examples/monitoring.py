@@ -31,9 +31,12 @@ def main():
     rt.server.register("MonitorCall", lambda req: {"payload": "ack"})
     probe = rt.make_stub(svc, n_slots=512)
 
-    # synthetic zipf traffic: a few elephant flows, many mice
+    # synthetic zipf traffic: a few elephant flows, many mice. Probes are
+    # micro-batched 16 at a time — one INC-map kernel batch per flush
+    # instead of one per probe.
     rng = np.random.RandomState(0)
     truth = {}
+    probes = []
     for _ in range(200):
         flows = rng.zipf(1.4, 64) % 2000
         kvs = {}
@@ -41,7 +44,10 @@ def main():
             key = f"flow-{f}"
             kvs[key] = kvs.get(key, 0) + 1
             truth[key] = truth.get(key, 0) + 1
-        probe.call("MonitorCall", {"kvs": kvs, "payload": "probe"})
+        probes.append({"kvs": kvs, "payload": "probe"})
+    for i in range(0, len(probes), 16):
+        replies = probe.call_batch("MonitorCall", probes[i:i + 16])
+        assert all(r["payload"] == "ack" for r in replies)
 
     reply = probe.call("Query", {"kvs": {k: 0 for k in truth}})
     got = {k: int(v) for k, v in reply["kvs"].items()}

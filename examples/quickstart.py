@@ -38,13 +38,26 @@ def main():
     grad_a = np.array([0.125, -1.5, 3.25, 0.0])
     grad_b = np.array([1.0, 0.5, -0.25, 2.0])
 
-    r1 = worker_a.call("Update", {"tensor": grad_a})
-    print("worker A reply (below threshold, dropped in-network):", r1)
-    r2 = worker_b.call("Update", {"tensor": grad_b})
-    agg = np.array([r2["tensor"][i] for i in range(4)])
+    # batch front: both workers submit; drain() coalesces the calls that
+    # share the DT-1 channel into ONE pass over the INC data plane
+    t_a = runtime.submit(worker_a, "Update", {"tensor": grad_a})
+    t_b = runtime.submit(worker_b, "Update", {"tensor": grad_b})
+    n = runtime.drain()
+    print(f"drained {n} calls in one channel batch")
+    print("worker A reply (below threshold, dropped in-network):",
+          t_a.result())
+    agg = np.array([t_b.result()["tensor"][i] for i in range(4)])
     print("worker B reply (aggregated):", agg)
     assert np.allclose(agg, grad_a + grad_b, atol=1e-6)
     print("== in-network sum matches", (grad_a + grad_b).tolist())
+
+    # the sequential API is the same pipeline with batch size 1
+    r1 = worker_a.call("Update", {"tensor": grad_a})
+    r2 = worker_b.call("Update", {"tensor": grad_b})
+    assert r1 == {} and np.allclose(
+        np.array([r2["tensor"][i] for i in range(4)]), grad_a + grad_b,
+        atol=1e-6)
+    print("== sequential call() round agrees")
 
 
 if __name__ == "__main__":

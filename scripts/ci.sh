@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Tier-1 fast lane: the non-slow suite under a timeout, with a pass/fail
+# delta against the recorded seed baseline.
+#
+#   make test-fast        (or: bash scripts/ci.sh)
+#
+# Exits non-zero if anything fails/errors or if collection breaks.
+set -u
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Seed baseline (full suite, PR 0): collection errors MUST stay 0 now that
+# the hypothesis shim exists; the 9 fails / 3 errors were JAX API drift,
+# fixed in PR 1 except the 3 slow multidevice tests (excluded here).
+SEED_PASS=113 SEED_FAIL=9 SEED_ERR=3 SEED_COLLECT_ERR=5
+
+out=$(timeout "${CI_TIMEOUT:-600}" python -m pytest -q -m "not slow" 2>&1)
+status=$?
+tail=$(echo "$out" | tail -20)
+
+count() { echo "$tail" | grep -oE "[0-9]+ $1" | tail -1 | grep -oE "[0-9]+" || echo 0; }
+passed=$(count passed)
+failed=$(count failed)
+errors=$(count "errors?")
+
+echo "$tail"
+echo "----------------------------------------------------------------------"
+echo "fast lane:  ${passed} passed, ${failed} failed, ${errors} errors"
+echo "seed (full suite): ${SEED_PASS} passed, ${SEED_FAIL} failed," \
+     "${SEED_ERR} errors, ${SEED_COLLECT_ERR} collection errors"
+echo "delta vs seed: pass $((passed - SEED_PASS)), fail $((failed - SEED_FAIL)), err $((errors - SEED_ERR))"
+
+if [ "$status" -ne 0 ]; then
+    echo "FAST LANE: FAIL (pytest exit $status)"
+    exit "$status"
+fi
+echo "FAST LANE: OK"

@@ -1,0 +1,62 @@
+"""Version-tolerant wrappers for jax APIs that drifted across releases.
+
+Two call sites in this codebase are written against the newer jax surface:
+
+  - ``jax.make_mesh(..., axis_types=...)`` — older releases take no
+    ``axis_types`` keyword (and have no ``jax.sharding.AxisType``);
+  - ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=...,
+    axis_names=..., check_vma=...)`` — older releases expose
+    ``jax.experimental.shard_map.shard_map`` with ``auto=`` (the
+    complement of ``axis_names``) and ``check_rep=`` instead;
+  - ``jax.lax.axis_size(name)`` — older releases have no such function;
+    ``jax.lax.psum(1, name)`` folds to the same concrete int inside a
+    manual-mode region.
+
+Everything under src/, tests/multidevice/ and benchmarks/ goes through
+these wrappers so the repo runs unmodified on either side of the drift.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """jax.make_mesh with Auto axis types where the keyword exists."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                                 axis_types=(axis_type.Auto,)
+                                 * len(axis_names))
+        except TypeError:
+            pass
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """jax.shard_map on new releases; experimental shard_map otherwise.
+
+    ``axis_names`` is the set of MANUAL axes (new-API meaning); on the old
+    API it becomes ``auto = mesh axes - axis_names``. ``check_vma`` maps to
+    the old ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    manual = frozenset(axis_names if axis_names is not None
+                       else mesh.axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma,
+                      auto=frozenset(mesh.axis_names) - manual)
+
+
+def axis_size(name) -> int:
+    """Size of a named mesh axis, callable inside shard_map bodies."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)

@@ -29,10 +29,22 @@ class ChannelStats:
     calls: int = 0
     inc_bytes: int = 0
     host_bytes: int = 0
+    batches: int = 0          # pipeline passes (a batch of N calls is one)
+    max_batch: int = 0        # largest coalesced batch seen
+
+    @property
+    def mean_batch(self) -> float:
+        return self.calls / self.batches if self.batches else 0.0
 
 
 class Channel:
-    """One application's INC connection: NetFilter + agents + partition."""
+    """One application's INC connection: NetFilter + agents + partition.
+
+    ``pending`` is the channel's micro-batching queue: NetRPC.submit
+    enqueues (ticket, planned call) pairs here — possibly from many stubs
+    and methods of the app — and NetRPC.drain executes each channel's queue
+    as one pipeline batch.
+    """
 
     def __init__(self, gaid: int, nf: NetFilter, server: ServerAgent,
                  controller: "Controller"):
@@ -43,11 +55,16 @@ class Channel:
         self.clients: list[ClientAgent] = []
         self.stats = ChannelStats()
         self.app_type = nf.app_type()
+        self.pending: list = []
 
     def client(self) -> ClientAgent:
         c = ClientAgent(self.server)
         self.clients.append(c)
         return c
+
+    def take_pending(self) -> list:
+        taken, self.pending = self.pending, []
+        return taken
 
     def touch(self) -> None:
         self.controller.touch(self.gaid)

@@ -32,6 +32,8 @@ from functools import reduce
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.core import ring
 from repro.core.quantize import dequantize, quantize
 from repro.kernels import ops
@@ -56,7 +58,7 @@ class IncAggConfig:
 def dp_size(dp_axes: tuple[str, ...]) -> jax.Array:
     n = 1
     for ax in dp_axes:
-        n = n * jax.lax.axis_size(ax)
+        n = n * compat.axis_size(ax)
     return n
 
 
@@ -181,7 +183,7 @@ def _owned_offset(dp_axes: tuple[str, ...], chunk_len) -> jax.Array:
     for ax in reversed(dp_axes):
         j = jax.lax.axis_index(ax)
         off = off + j * span
-        span = span * jax.lax.axis_size(ax)
+        span = span * compat.axis_size(ax)
     return off
 
 
@@ -243,7 +245,7 @@ from repro.kernels import ref as _ref
 def _dp_size_static(dp_axes):
     n = 1
     for ax in dp_axes:
-        n = n * jax.lax.axis_size(ax)
+        n = n * compat.axis_size(ax)
     return n
 
 

@@ -51,7 +51,7 @@ class Segment:
 
     def __post_init__(self):
         if self.regs is None:
-            self.regs = jnp.zeros(self.n_slots, jnp.int32)
+            self.regs = ops.zeros_regs(self.n_slots)
 
 
 class SwitchMemory:
@@ -93,14 +93,16 @@ class SwitchMemory:
         return phys // self.seg_slots, phys % self.seg_slots
 
     def addto(self, phys: np.ndarray, vals: np.ndarray) -> None:
-        """Saturating scatter-add batches into the owning segments."""
+        """Saturating scatter-add batches into the owning segments — one
+        (bucketed) sparse_addto kernel launch per touched segment, however
+        many RPC calls contributed to the batch."""
         seg_ix, off = self._locate(np.asarray(phys))
         for s in np.unique(seg_ix):
             m = seg_ix == s
             seg = self.segments[int(s)]
-            seg.regs = ops.sparse_addto(seg.regs,
-                                        jnp.asarray(off[m], jnp.int32),
-                                        jnp.asarray(vals[m], jnp.int32))
+            seg.regs = ops.sparse_addto_bucketed(
+                seg.regs, np.asarray(off[m], np.int32),
+                np.asarray(vals[m], np.int32))
 
     def get(self, phys: np.ndarray) -> np.ndarray:
         seg_ix, off = self._locate(np.asarray(phys))
@@ -115,7 +117,10 @@ class SwitchMemory:
         for s in np.unique(seg_ix):
             m = seg_ix == s
             seg = self.segments[int(s)]
-            seg.regs = seg.regs.at[jnp.asarray(off[m])].set(0)
+            if isinstance(seg.regs, np.ndarray):   # host-path register file
+                seg.regs[off[m]] = 0
+            else:
+                seg.regs = seg.regs.at[jnp.asarray(off[m])].set(0)
 
 
 class ServerAgent:
@@ -143,6 +148,11 @@ class ServerAgent:
         self.spill: dict[int, int] = defaultdict(int)   # host-side values
         self.window_counts: Counter = Counter()
         self.seen_this_window = 0
+        # grants whose spilled value hasn't been migrated on-switch yet.
+        # Reads stay exact while one is pending (read = spill + register and
+        # the value sits in exactly one of the two); batching the migrations
+        # turns per-new-key register writes into one addto per batch.
+        self._pending_migrations: list[tuple[int, int]] = []
         # metrics
         self.hits = 0
         self.misses = 0
@@ -155,32 +165,49 @@ class ServerAgent:
         """Route a batch of (logical addr, value) updates: INC or host."""
         logical = np.asarray(logical, np.uint32)
         vals = np.asarray(vals, np.int64)
-        mapped = np.array([l in self.mapping for l in logical])
+        logs = logical.tolist()
+        mapped = [l in self.mapping for l in logs]
+        n_hit = sum(mapped)
         # INC path
-        if mapped.any():
-            phys = np.array([self.mapping[l] for l in logical[mapped]])
-            self.switch.addto(self.base + phys, vals[mapped].astype(np.int32))
-            self.hits += int(mapped.sum())
-            self.inc_bytes += int(mapped.sum()) * 8
+        if n_hit:
+            mask = np.array(mapped)
+            phys = np.array([self.mapping[l]
+                             for l, m in zip(logs, mapped) if m])
+            self.switch.addto(self.base + phys, vals[mask].astype(np.int32))
+            self.hits += n_hit
+            self.inc_bytes += n_hit * 8
         # host path (miss): server agent software map + maybe grant mapping
-        for l, v in zip(logical[~mapped], vals[~mapped]):
-            self.spill[int(l)] += int(v)
-            self.misses += 1
-            self.host_bytes += 8
-            self._maybe_grant(int(l))
+        if n_hit < len(logs):
+            for l, m, v in zip(logs, mapped, vals.tolist()):
+                if m:
+                    continue
+                self.spill[l] += v
+                self.misses += 1
+                self.host_bytes += 8
+                self._maybe_grant(l)
         # usage accounting for the periodic LRU
-        self.window_counts.update(int(l) for l in logical)
-        self.seen_this_window += len(logical)
+        self.window_counts.update(logs)
+        self.seen_this_window += len(logs)
         if self.seen_this_window >= self.window:
             self.end_window()
+        self._flush_migrations()
 
     def read(self, logical: int) -> int:
         """Map.get: switch register (if mapped) + host spill."""
-        v = self.spill.get(int(logical), 0)
-        if int(logical) in self.mapping:
-            v += int(self.switch.get(
-                np.array([self.base + self.mapping[int(logical)]]))[0])
-        return v
+        return int(self.read_batch(np.array([logical], np.uint32))[0])
+
+    def read_batch(self, logical: np.ndarray) -> np.ndarray:
+        """Batched Map.get: ONE switch gather for all mapped addresses plus
+        the host-spill components — the data-plane read of call_batch."""
+        logical = np.asarray(logical, np.uint32)
+        out = np.array([self.spill.get(int(l), 0) for l in logical], np.int64)
+        mapped_ix = [i for i, l in enumerate(logical)
+                     if int(l) in self.mapping]
+        if mapped_ix:
+            phys = self.base + np.array(
+                [self.mapping[int(logical[i])] for i in mapped_ix])
+            out[mapped_ix] += self.switch.get(phys).astype(np.int64)
+        return out
 
     def read_all(self) -> dict[int, int]:
         out = dict(self.spill)
@@ -193,6 +220,7 @@ class ServerAgent:
         return out
 
     def clear_all(self) -> None:
+        self._pending_migrations.clear()    # values below are wiped anyway
         if self.mapping:
             phys = self.base + np.array(list(self.mapping.values()))
             self.switch.clear(phys)
@@ -221,15 +249,29 @@ class ServerAgent:
 
     def _install(self, logical: int, slot: int) -> None:
         self.mapping[logical] = slot
-        # migrate the host-spilled partial value into the register
-        v = self.spill.pop(logical, 0)
-        if v:
-            self.switch.addto(np.array([self.base + slot]),
-                              np.array([v], np.int32))
+        # migrate the host-spilled partial value into the register — queued
+        # so a burst of grants becomes one switch.addto batch
+        self._pending_migrations.append((logical, slot))
+
+    def _flush_migrations(self) -> None:
+        if not self._pending_migrations:
+            return
+        pending, self._pending_migrations = self._pending_migrations, []
+        phys, vals = [], []
+        for logical, slot in pending:
+            if self.mapping.get(logical) != slot:
+                continue                     # evicted/remapped while queued
+            v = self.spill.pop(logical, 0)
+            if v:
+                phys.append(self.base + slot)
+                vals.append(v)
+        if phys:
+            self.switch.addto(np.array(phys), np.array(vals, np.int32))
 
     def end_window(self) -> None:
         """Periodic counting-based LRU (§5.2.2): clients report per-window
         use counts; the agent evicts mapped keys colder than unmapped ones."""
+        self._flush_migrations()
         if self.policy == "netrpc-lru" and self.capacity:
             hot = [l for l, _ in self.window_counts.most_common(self.capacity)]
             hot_set = set(hot)
@@ -247,10 +289,12 @@ class ServerAgent:
                 self._install(want.pop(0), slot)
         self.window_counts.clear()
         self.seen_this_window = 0
+        self._flush_migrations()
 
     def retrieve_all(self) -> None:
         """Pull every mapped register value into the host-side map (the
         level-1 timeout retrieval of §5.2.2, also used at graceful stop)."""
+        self._flush_migrations()
         for logical, slot in list(self.mapping.items()):
             v = int(self.switch.get(np.array([self.base + slot]))[0])
             if v:
@@ -280,33 +324,61 @@ class ClientAgent:
         self.server = server
         self.key_of: dict[int, str | bytes | int] = {}
         self.collisions: dict[str | bytes | int, int] = {}
+        self._addr: dict = {}          # key -> logical (or None): memoized
 
     def logical(self, key) -> int | None:
-        """Returns the logical address, or None if the key must bypass INC."""
+        """Returns the logical address, or None if the key must bypass INC.
+
+        Memoized: once a key is canonical for its hash it stays canonical,
+        and a collision is permanent, so the cached answer never changes.
+        """
+        try:
+            return self._addr[key]
+        except KeyError:
+            pass
         if key in self.collisions:
-            return None
-        l = hash_key(key)
-        owner = self.key_of.setdefault(l, key)
-        if owner != key:
-            self.collisions[key] = l
-            return None
+            l = None
+        else:
+            l = hash_key(key)
+            owner = self.key_of.setdefault(l, key)
+            if owner != key:
+                self.collisions[key] = l
+                l = None
+        self._addr[key] = l
         return l
 
-    def addto(self, kv: dict, precision: int = 0) -> None:
+    def resolve(self, kv: dict, precision: int = 0
+                ) -> tuple[np.ndarray, np.ndarray, list[tuple[int, int]]]:
+        """Key -> logical-address resolution without touching the server:
+        returns (logical addrs, fixed-point values, collision host-path
+        pairs). The batched pipeline buffers these and flushes many calls'
+        worth in one addto_batch."""
         scale = 10 ** precision
-        logs, vals = [], []
-        for k, v in kv.items():
-            l = self.logical(k)
-            iv = int(round(v * scale))
-            if l is None:
-                self.server.spill[hash_key(k)] += iv  # host path
-                self.server.host_bytes += 8
-            else:
-                logs.append(l)
-                vals.append(iv)
-        if logs:
-            self.server.addto_batch(np.array(logs, np.uint32),
-                                    np.array(vals, np.int64))
+        logs = [self.logical(k) for k in kv]
+        if scale == 1:
+            vals = [v if type(v) is int else int(round(v))
+                    for v in kv.values()]
+        else:
+            vals = [int(round(v * scale)) for v in kv.values()]
+        spills = []
+        if None in logs:                    # collision host path (rare)
+            keep_l, keep_v = [], []
+            for k, l, iv in zip(kv, logs, vals):
+                if l is None:
+                    spills.append((hash_key(k), iv))
+                else:
+                    keep_l.append(l)
+                    keep_v.append(iv)
+            logs, vals = keep_l, keep_v
+        return (np.array(logs, np.uint32), np.array(vals, np.int64), spills)
+
+    def addto(self, kv: dict, precision: int = 0) -> None:
+        logs, vals, spills = self.resolve(kv, precision)
+        for l, iv in spills:
+            self.server.spill[l] += iv
+            self.server.host_bytes += 8
+        if len(logs):
+            self.server.addto_batch(logs, vals)
 
     def read(self, key, precision: int = 0) -> float:
         l = hash_key(key)

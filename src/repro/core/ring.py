@@ -30,6 +30,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.kernels import ops
 
 AddFn = Callable[[jax.Array, jax.Array], jax.Array]
@@ -46,7 +48,7 @@ def reduce_scatter_chunked(buf: jax.Array, axis: str, add: AddFn) -> jax.Array:
 
     Rank j ends holding fully-reduced chunk j.
     """
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     j = jax.lax.axis_index(axis)
     assert buf.shape[0] == n, (buf.shape, n)
     perm = _ring_perm(n)
@@ -66,7 +68,7 @@ def reduce_scatter_chunked(buf: jax.Array, axis: str, add: AddFn) -> jax.Array:
 
 def all_gather_chunked(chunk: jax.Array, axis: str) -> jax.Array:
     """Inverse scatter: circulate reduced chunks. chunk j at rank j -> (n, ...)."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     j = jax.lax.axis_index(axis)
     perm = _ring_perm(n)
     buf0 = jnp.zeros((n,) + chunk.shape, chunk.dtype)
@@ -87,7 +89,7 @@ def all_gather_chunked(chunk: jax.Array, axis: str) -> jax.Array:
 
 def ring_reduce_scatter(x: jax.Array, axis: str, add: AddFn) -> jax.Array:
     """Flat (L,) per-device buffer -> this rank's reduced chunk (L/n,)."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     L = x.shape[0]
     assert L % n == 0, (L, n)
     return reduce_scatter_chunked(x.reshape(n, L // n), axis, add)
@@ -95,7 +97,7 @@ def ring_reduce_scatter(x: jax.Array, axis: str, add: AddFn) -> jax.Array:
 
 def ring_all_gather(chunk: jax.Array, axis: str) -> jax.Array:
     """Rank-j-owns-chunk-j (c,) -> full (n*c,) reduced buffer on every rank."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     return all_gather_chunked(chunk, axis).reshape(n * chunk.shape[0])
 
 
@@ -115,7 +117,7 @@ def hierarchical_reduce_scatter(x: jax.Array, axes: tuple[str, ...],
     carry auto (tensor-parallel) shardings. Ownership is axes[0]-major.
     """
     for ax in axes:
-        n = jax.lax.axis_size(ax)
+        n = compat.axis_size(ax)
         f = x.shape[0]
         assert f % n == 0, (f, n, ax)
         x = reduce_scatter_chunked(x.reshape(n, f // n, *x.shape[1:]), ax,
@@ -127,7 +129,7 @@ def hierarchical_all_gather(chunk: jax.Array, axes: tuple[str, ...]
                             ) -> jax.Array:
     """Inverse of hierarchical_reduce_scatter: (c, ...) -> (n_dp*c, ...)."""
     for ax in reversed(axes):
-        n = jax.lax.axis_size(ax)
+        n = compat.axis_size(ax)
         buf = all_gather_chunked(chunk, ax)      # (n, c, ...)
         chunk = buf.reshape(n * chunk.shape[0], *chunk.shape[1:])
     return chunk
@@ -143,7 +145,7 @@ def dp_index(axes: tuple[str, ...]) -> jax.Array:
     """Row-major rank over the product of the given manual axes."""
     idx = 0
     for ax in axes:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        idx = idx * compat.axis_size(ax) + jax.lax.axis_index(ax)
     return idx
 
 

@@ -13,6 +13,30 @@ call returns early with only the INC side effects (sub-RTT path); otherwise
 the server handler runs and the reply stream executes Map.get (+ the
 configured Map.clear policy) on the way back.
 
+Batch API (§5 line-rate plane). There is exactly ONE pipeline
+implementation, `_run_pipeline`, which executes a *list* of calls against a
+shared channel:
+
+  - ``Stub.call(method, request)``          — the N=1 special case;
+  - ``Stub.call_batch(method, requests)``   — N concurrent calls of one
+    method, vectorized: one fused Stream.modify per (op, para) group, one
+    ``sparse_addto`` batch per register segment for Map.addTo and the
+    CntFwd counters, one gather per Map.get;
+  - ``NetRPC.submit(stub, method, request)`` / ``NetRPC.drain()`` — a
+    micro-batching queue that coalesces calls from *different* stubs and
+    methods sharing a channel (the multi-application plane of Fig. 12)
+    into one pipeline run per channel.
+
+Single-pipeline invariant: the batched execution preserves the sequential
+semantics — ``call_batch(reqs) == [call(r) for r in reqs]`` — by buffering
+Map.addTo updates in submission order and flushing them (one kernel batch)
+before any Map.get observes the map, and by deciding CntFwd gating from the
+pre-batch counter values plus the in-batch increment order.  Two documented
+deviations, both value-preserving: cache-window boundaries (and hence LRU
+eviction instants) may differ because updates arrive in fewer, larger
+batches; and handlers must not read INC map state directly (an entry's
+addTo may still be buffered when its handler runs).
+
 This module is deliberately framework-level (host-side, numpy): the
 device-resident SyncAgtr fast path is core/inc_agg.py; examples/paxos.py,
 examples/mapreduce.py and examples/monitoring.py build the paper's three
@@ -84,6 +108,206 @@ class Server:
         return fn(request) if fn else {}
 
 
+# -- the batched RIP pipeline ------------------------------------------------
+
+def _stream_items(request: dict, msg_field: str) -> dict:
+    """"Message.field" -> items of that request field."""
+    fname = msg_field.split(".")[-1]
+    v = request.get(fname)
+    if v is None:
+        return {}
+    if isinstance(v, dict):
+        return v
+    return {i: x for i, x in enumerate(np.asarray(v).ravel())}
+
+
+@dataclass
+class _PlannedCall:
+    """One RPC flowing through the (batched) pipeline."""
+    agent: Any                                  # ClientAgent of the stub
+    md: Method
+    request: dict
+    items: dict = field(default_factory=dict)   # post-modify addTo items
+    logs: np.ndarray | None = None              # resolved logical addrs
+    vals: np.ndarray | None = None
+    spills: list = field(default_factory=list)  # collision host-path pairs
+    counter_ops: list = field(default_factory=list)  # CntFwd (key, delta)
+    forwarded: bool = True
+    completed: bool = False                     # pipeline finished this call
+    reply: dict = field(default_factory=dict)
+
+    @property
+    def nf(self) -> NetFilter:
+        return self.md.netfilter
+
+
+class _MapOpBuffer:
+    """Ordered, lazily-flushed Map.addTo stream for one channel batch.
+
+    Buffered updates concatenate into ONE ServerAgent.addto_batch per flush
+    (one sparse_addto kernel batch per register segment) instead of one
+    round trip per call. Collision-routed host-path items ride along and
+    are applied at the owning flush so no later Map.get can observe them
+    early.
+    """
+
+    def __init__(self, server):
+        self.server = server
+        self._logs: list[np.ndarray] = []
+        self._vals: list[np.ndarray] = []
+        self._extra: list[tuple[int, int]] = []     # scalar (addr, delta)
+        self._spills: list[tuple[int, int]] = []
+
+    def addto(self, logs: np.ndarray, vals: np.ndarray) -> None:
+        if len(logs):
+            self._logs.append(np.asarray(logs, np.uint32))
+            self._vals.append(np.asarray(vals, np.int64))
+
+    def add_scalar(self, addr: int, delta: int) -> None:
+        """Single-register update (CntFwd counters) without the per-call
+        array round trip; materialized once at flush."""
+        self._extra.append((addr, delta))
+
+    def spill(self, pairs: list[tuple[int, int]]) -> None:
+        self._spills.extend(pairs)
+
+    def flush(self) -> None:
+        if self._spills:
+            for l, v in self._spills:
+                self.server.spill[l] += v
+                self.server.host_bytes += 8
+            self._spills = []
+        if self._extra:
+            # counter addresses are disjoint from data keys, so appending
+            # them after the data chunks preserves observable semantics
+            self._logs.append(np.array([a for a, _ in self._extra],
+                                       np.uint32))
+            self._vals.append(np.array([d for _, d in self._extra],
+                                       np.int64))
+            self._extra = []
+        if self._logs:
+            self.server.addto_batch(np.concatenate(self._logs),
+                                    np.concatenate(self._vals))
+            self._logs, self._vals = [], []
+
+
+def _run_pipeline(channel: Channel, host_server: Server,
+                  calls: list[_PlannedCall]) -> list[dict]:
+    """THE data-plane pipeline. Every entry point (call / call_batch /
+    drain) lands here; N=1 is just a batch of one."""
+    server = channel.server
+    channel.touch()
+    channel.stats.calls += len(calls)
+    channel.stats.batches += 1
+    channel.stats.max_batch = max(channel.stats.max_batch, len(calls))
+
+    # ---- phase 1: Stream.modify, fused across the batch --------------------
+    for c in calls:
+        c.items = (_stream_items(c.request, c.nf.add_to)
+                   if c.nf.add_to != "nop" else {})
+    groups: dict[tuple[str, int], list[int]] = {}
+    for i, c in enumerate(calls):
+        if c.items and c.nf.modify.op != "nop":
+            groups.setdefault((c.nf.modify.op, c.nf.modify.para), []).append(i)
+    for (op, para), ixs in groups.items():
+        scaled = []
+        for i in ixs:
+            s = 10 ** calls[i].nf.precision
+            scaled.append(np.array(
+                [int(round(x * s)) for x in calls[i].items.values()],
+                np.int32))
+        fused = np.asarray(ref.stream_modify(np.concatenate(scaled), op,
+                                             para), np.int64)
+        pos = 0
+        for i, seg in zip(ixs, scaled):
+            s = 10 ** calls[i].nf.precision
+            calls[i].items = dict(zip(calls[i].items.keys(),
+                                      fused[pos:pos + len(seg)] / s))
+            pos += len(seg)
+
+    # ---- phase 2: client-side logical-address resolution --------------------
+    for c in calls:
+        if c.items:
+            c.logs, c.vals, c.spills = c.agent.resolve(c.items,
+                                                       c.nf.precision)
+
+    # ---- phase 3: CntFwd gating (simulated over pre-batch counters) ---------
+    # Counter keys are disjoint from data keys, so the per-tag count at any
+    # point in the batch is the pre-batch value plus the in-batch increments
+    # before it — no device round trip per call. The actual counter writes
+    # are emitted into the ordered update stream (phase 4) so a later batch
+    # (or interleaved sequential call) observes the same map state.
+    cf_calls = [c for c in calls if c.nf.cnt_fwd.enabled]
+    if cf_calls:
+        tags = []
+        for c in cf_calls:
+            ballot = c.request.get(c.nf.cnt_fwd.key.split(".")[-1])
+            tag = (next(iter(ballot)) if isinstance(ballot, dict)
+                   else c.nf.cnt_fwd.key)
+            tags.append(hash_key(f"__cntfwd__{tag}"))
+        distinct = sorted(set(tags))
+        pre = server.read_batch(np.array(distinct, np.uint32))
+        sim = {k: int(v) for k, v in zip(distinct, pre)}
+        for c, key in zip(cf_calls, tags):
+            sim[key] += 1
+            cnt = sim[key]
+            # Table 2: forward iff cnt == threshold (exact), so late packets
+            # after the quorum are dropped too
+            c.forwarded = cnt == c.nf.cnt_fwd.threshold
+            c.counter_ops = [(key, 1)]
+            if c.forwarded and c.nf.clear != "nop":
+                c.counter_ops.append((key, -cnt))
+                sim[key] = 0
+
+    # ---- phase 4: ordered execution with lazy flushing ----------------------
+    # The final flush runs even if a handler raises mid-batch, so calls that
+    # already took their turn keep their INC side effects — exactly as if
+    # they had been issued sequentially before the failing call.
+    buf = _MapOpBuffer(server)
+    try:
+        for c in calls:
+            if c.logs is not None:
+                buf.spill(c.spills)
+                buf.addto(c.logs, c.vals)
+            for key, delta in c.counter_ops:
+                buf.add_scalar(key, delta)
+
+            if c.forwarded:
+                # normal (non-IEDT) fields pass through to the server handler
+                passthrough = {f.name: c.request.get(f.name)
+                               for f in c.md.request if f.iedt is None}
+                c.reply = dict(host_server.handle(c.md.name,
+                                                  passthrough) or {})
+
+            # reply path: Map.get (+ clear policy)
+            if c.nf.get != "nop" and c.forwarded:
+                buf.flush()      # this get must observe every earlier addTo
+                fname = c.nf.get.split(".")[-1]
+                if c.nf.add_to != "nop":
+                    keys = list(c.items.keys())
+                else:
+                    keys = list(c.request.get(fname, {}).keys()) or \
+                        list(server.spill.keys())
+                logs = np.array([hash_key(k) for k in keys], np.uint32)
+                raw = (server.read_batch(logs) if len(logs)
+                       else np.zeros(0, np.int64))
+                scale = 10 ** c.nf.precision
+                c.reply[fname] = {k: int(r) / scale
+                                  for k, r in zip(keys, raw)}
+                if c.nf.clear in POLICIES:
+                    # copy: values are already backed up server-side (the
+                    # read above); shadow/lazy semantics are exercised on
+                    # the device path (core/clear_policy.py) — here clear
+                    # empties the map.
+                    nz = raw != 0
+                    if nz.any():
+                        server.addto_batch(logs[nz], -raw[nz])
+            c.completed = True
+    finally:
+        buf.flush()
+    return [c.reply for c in calls]
+
+
 # -- client stub -------------------------------------------------------------
 
 class Stub:
@@ -96,86 +320,70 @@ class Stub:
         self.server = server
         self.agents = {m: ch.client() for m, ch in channels.items()}
 
+    def _plan(self, method: str, request: dict) -> _PlannedCall:
+        return _PlannedCall(agent=self.agents[method],
+                            md=self.service.methods[method], request=request)
+
     def call(self, method: str, request: dict) -> dict:
-        md = self.service.methods[method]
+        return self.call_batch(method, [request])[0]
+
+    def call_batch(self, method: str, requests: list[dict]) -> list[dict]:
+        """Run N concurrent calls of one method through a single pipeline
+        pass; replies are positionally aligned with ``requests``."""
+        if not requests:
+            return []
         ch = self.channels[method]
-        nf = md.netfilter
-        agent = self.agents[method]
-        ch.touch()
-        ch.stats.calls += 1
-        scale = 10 ** nf.precision
-
-        # ---- request path: Stream.modify then Map.addTo -------------------
-        def stream_items(msg_field: str) -> dict:
-            # "Message.field" -> items of that request field
-            fname = msg_field.split(".")[-1]
-            v = request.get(fname)
-            if v is None:
-                return {}
-            if isinstance(v, dict):
-                return v
-            return {i: x for i, x in enumerate(np.asarray(v).ravel())}
-
-        if nf.add_to != "nop":
-            items = stream_items(nf.add_to)
-            if nf.modify.op != "nop":
-                vals = ref.stream_modify(
-                    np.array([int(round(x * scale)) for x in items.values()],
-                             np.int32), nf.modify.op, nf.modify.para)
-                items = dict(zip(items.keys(),
-                                 np.asarray(vals, np.int64) / scale))
-            agent.addto(items, nf.precision)
-
-        # ---- CntFwd gate ---------------------------------------------------
-        forwarded = True
-        if nf.cnt_fwd.enabled:
-            # Table 2: cnt[key]++; forward iff cnt == threshold (exact), so
-            # late packets after the quorum are dropped too
-            ballot = request.get(nf.cnt_fwd.key.split(".")[-1])
-            tag = (next(iter(ballot)) if isinstance(ballot, dict)
-                   else nf.cnt_fwd.key)
-            key = hash_key(f"__cntfwd__{tag}")
-            agent.server.addto_batch(np.array([key], np.uint32),
-                                     np.array([1], np.int64))
-            cnt = agent.server.read(key)
-            forwarded = cnt == nf.cnt_fwd.threshold
-            if forwarded and nf.clear != "nop":
-                agent.server.addto_batch(np.array([key], np.uint32),
-                                         np.array([-cnt], np.int64))
-
-        reply: dict = {}
-        if forwarded:
-            # normal (non-IEDT) fields pass through to the server handler
-            passthrough = {f.name: request.get(f.name)
-                           for f in md.request if f.iedt is None}
-            reply = dict(self.server.handle(method, passthrough) or {})
-
-        # ---- reply path: Map.get (+ clear policy) --------------------------
-        if nf.get != "nop" and forwarded:
-            fname = nf.get.split(".")[-1]
-            if nf.add_to != "nop":
-                keys = list(stream_items(nf.add_to).keys())
-            else:
-                keys = list(request.get(fname, {}).keys()) or \
-                    list(agent.server.spill.keys())
-            out = {k: agent.read(k, nf.precision) for k in keys}
-            reply[fname] = out
-            if nf.clear in POLICIES:
-                # copy: values are already backed up server-side (the read
-                # above); shadow/lazy semantics are exercised on the device
-                # path (core/clear_policy.py) — here clear empties the map.
-                for k in keys:
-                    cur = agent.server.read(hash_key(k) if not isinstance(
-                        k, int) else k)
-                    if cur:
-                        agent.server.addto_batch(
-                            np.array([hash_key(k) if not isinstance(k, int)
-                                      else k], np.uint32),
-                            np.array([-cur], np.int64))
-        return reply
+        if ch.pending:
+            # calls queued via submit() were issued first — execute them
+            # before this batch so issue order is preserved on the channel
+            _drain_channel(ch, self.server)
+        return _run_pipeline(ch, self.server,
+                             [self._plan(method, r) for r in requests])
 
 
 # -- runtime -----------------------------------------------------------------
+
+def _drain_channel(ch: Channel, host_server: Server) -> int:
+    """Execute one channel's queued (ticket, planned call) entries as a
+    single pipeline batch; returns the number of tickets resolved. On a
+    mid-batch exception, calls that completed keep their effects and their
+    tickets resolve (sequential semantics), the rest are abandoned."""
+    entries = ch.take_pending()
+    if not entries:
+        return 0
+    n = 0
+    try:
+        _run_pipeline(ch, host_server, [p for _, p in entries])
+    finally:
+        for t, p in entries:
+            if p.completed:
+                t.reply = p.reply
+                t.done = True
+                n += 1
+            else:
+                t.abandoned = True
+    return n
+
+
+class Ticket:
+    """Handle for a submitted-but-not-yet-drained call."""
+
+    __slots__ = ("reply", "done", "abandoned")
+
+    def __init__(self):
+        self.reply: dict | None = None
+        self.done = False
+        self.abandoned = False      # batch died before this call's turn
+
+    def result(self) -> dict:
+        if self.abandoned:
+            raise RuntimeError(
+                "call abandoned: its batch raised before this call "
+                "completed; resubmit it")
+        if not self.done:
+            raise RuntimeError("call not executed yet — drain() the runtime")
+        return self.reply
+
 
 class NetRPC:
     """In-process NetRPC runtime: controller + switch + agents.
@@ -183,11 +391,17 @@ class NetRPC:
     make_stub() is the analogue of `NewStub(channel)`; one Channel (GAID,
     switch partition) is created per method's NetFilter AppName, shared by
     all stubs of that app — the multi-application data plane.
+
+    submit()/drain() is the micro-batching front: submitted calls queue on
+    their channel and drain() executes one pipeline pass per channel, so
+    calls from different stubs — and different methods of one app — that
+    share a channel coalesce into a single kernel batch.
     """
 
     def __init__(self, controller: Controller | None = None):
         self.controller = controller or Controller()
         self.server = Server()
+        self._dirty: list[Channel] = []      # channels with queued calls
 
     def make_stub(self, service: Service, n_slots: int = 4096) -> Stub:
         channels = {}
@@ -199,3 +413,33 @@ class NetRPC:
                 ch = self.controller.register(md.netfilter, n_slots)
             channels[mname] = ch
         return Stub(service, channels, self.server)
+
+    def submit(self, stub: Stub, method: str, request: dict) -> Ticket:
+        ch = stub.channels[method]
+        t = Ticket()
+        if ch not in self._dirty:
+            self._dirty.append(ch)
+        ch.pending.append((t, stub._plan(method, request)))
+        return t
+
+    def drain(self) -> int:
+        """Flush every per-channel queue; returns the number of calls run.
+
+        If a handler raises mid-batch, calls that completed before it keep
+        their effects and their tickets resolve (sequential semantics); the
+        exception then propagates with the rest of that channel's queue
+        abandoned — but every OTHER dirty channel stays queued for the
+        next drain().
+        """
+        n = 0
+        dirty, self._dirty = self._dirty, []
+        try:
+            while dirty:
+                ch = dirty.pop(0)
+                n += _drain_channel(ch, self.server)
+        finally:
+            # channels not reached (an earlier channel's batch raised)
+            # stay dirty; drained channels may have been re-dirtied by a
+            # handler submitting follow-up calls — keep those too
+            self._dirty = dirty + [c for c in self._dirty if c not in dirty]
+        return n

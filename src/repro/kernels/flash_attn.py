@@ -27,6 +27,18 @@ DEFAULT_BLOCK_Q = 512
 DEFAULT_BLOCK_K = 512
 
 
+def _compiler_params_cls():
+    """pltpu.CompilerParams, named TPUCompilerParams before jax 0.6."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = (getattr(pltpu, "CompilerParams", None)
+           or getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise RuntimeError(
+            "unsupported jax version: jax.experimental.pallas.tpu exposes "
+            "neither CompilerParams nor TPUCompilerParams")
+    return cls
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   sm_scale: float, causal: bool, block_q: int,
                   block_k: int, window: int | None = None):
@@ -122,7 +134,8 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        # CompilerParams was TPUCompilerParams before jax 0.6
+        compiler_params=_compiler_params_cls()(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -15,9 +15,11 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.constants import DEFAULT_BLOCK_ROWS, LANES
+from repro.kernels.constants import (DEFAULT_BLOCK_ROWS, INT32_MAX,
+                                     INT32_MIN, LANES, SAT_MAX, SAT_MIN)
 from repro.kernels.dequantize import dequantize_pallas
 from repro.kernels.flash_attn import (flash_attention_chunked_ref,
                                       flash_attention_pallas)
@@ -90,12 +92,102 @@ def sat_add(a: jax.Array, b: jax.Array,
     return _from_tiles(s, n).reshape(shape)
 
 
+def _sat_add_scalar(a: int, b: int) -> int:
+    """Exact scalar ref.sat_add: sticky sentinels (a's wins), then the
+    wrapped-add overflow reconstruction on the true integer sum."""
+    for x in (a, b):
+        if x == INT32_MAX:
+            return INT32_MAX
+        if x == INT32_MIN:
+            return INT32_MIN
+    s = a + b
+    if s > 2**31 - 1:
+        return INT32_MAX
+    if s < -2**31:
+        return INT32_MIN
+    return s
+
+
+def sparse_addto_host(regs: np.ndarray, idx: np.ndarray,
+                      val: np.ndarray) -> np.ndarray:
+    """Numpy sparse_addto, result-identical to ref.sparse_addto; MUTATES
+    ``regs`` in place (it is the host-path register file) and returns it.
+
+    The sequential oracle order only matters where saturation can occur.
+    Work is confined to the touched slots: a slot for which |reg| + sum|val|
+    stays within the SAT range can never produce (or have started from) a
+    sentinel at any prefix of the update stream, so its updates collapse to
+    one segment-sum; only updates to the remaining slots run the exact
+    scalar loop. A host flush of a large batched-RPC window is thus O(k)
+    numpy instead of an O(k) sequential XLA loop over an O(n_slots) array.
+    """
+    idx = np.asarray(idx, np.int64)
+    val = np.asarray(val, np.int64)
+    if len(idx) == 0:
+        return regs
+    touched = np.unique(idx)
+    pos = np.searchsorted(touched, idx)     # update -> touched-slot index
+    cur = regs[touched].astype(np.int64)
+    abs_sum = np.zeros(len(touched), np.int64)
+    np.add.at(abs_sum, pos, np.abs(val))
+    safe = np.abs(cur) + abs_sum <= SAT_MAX         # -SAT_MIN == SAT_MAX
+    safe_upd = safe[pos]
+    sums = np.zeros(len(touched), np.int64)
+    np.add.at(sums, pos[safe_upd], val[safe_upd])
+    new = cur + sums
+    for i in np.nonzero(~safe_upd)[0]:      # exact order where it matters
+        t = pos[i]
+        new[t] = _sat_add_scalar(int(new[t]), int(val[i]))
+    regs[touched] = new.astype(np.int32)
+    return regs
+
+
 @jax.jit
-def sparse_addto(regs: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
-    """Sequential saturating scatter-add of (idx, val) pairs into regs."""
-    if not use_pallas():
-        return ref.sparse_addto(regs, idx, val)
+def _sparse_addto_dev(regs: jax.Array, idx: jax.Array,
+                      val: jax.Array) -> jax.Array:
     return sparse_addto_pallas(regs, idx, val, interpret=_interpret())
+
+
+def zeros_regs(n_slots: int):
+    """A fresh register segment: device array on TPU, numpy on the host
+    path (so host flushes never round-trip through the device)."""
+    if use_pallas():
+        return jnp.zeros(n_slots, jnp.int32)
+    return np.zeros(n_slots, np.int32)
+
+
+def sparse_addto(regs, idx, val):
+    """Sequential saturating scatter-add of (idx, val) pairs into regs.
+
+    TPU: the Pallas register-file kernel (functional — returns a new
+    array). Elsewhere: the exact numpy host kernel, which updates ``regs``
+    IN PLACE when it is a writable ndarray and returns it; callers must
+    treat the return value as the new register file either way.
+    """
+    if not use_pallas():
+        if not (isinstance(regs, np.ndarray) and regs.flags.writeable):
+            regs = np.array(regs, np.int32)
+        return sparse_addto_host(regs, np.asarray(idx), np.asarray(val))
+    return _sparse_addto_dev(regs, idx, val)
+
+
+def sparse_addto_bucketed(regs, idx, val):
+    """sparse_addto with the device update stream padded to a power-of-two
+    length. Padding with (idx=0, val=0) is a no-op update (sat_add(x, 0) ==
+    x and a sentinel stays a sentinel), so results match the unpadded call
+    while the jit cache holds ~log2(k_max) entries per segment shape
+    instead of one per distinct flush size. Host path needs no bucketing.
+    """
+    k = int(idx.shape[0])
+    if k == 0:
+        return regs
+    if not use_pallas():
+        return sparse_addto(regs, idx, val)
+    bucket = 1 << (k - 1).bit_length()
+    if bucket != k:
+        idx = jnp.pad(jnp.asarray(idx, jnp.int32), (0, bucket - k))
+        val = jnp.pad(jnp.asarray(val, jnp.int32), (0, bucket - k))
+    return sparse_addto(regs, idx, val)
 
 
 @partial(jax.jit, static_argnames=("block_rows",))

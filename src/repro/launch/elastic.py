@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.checkpoint.store import CheckpointStore
 from repro.configs.base import get_arch
 from repro.core.agreement import elastic_mean, quorum_commit, quorum_count
+from repro import compat
 from repro.launch.train import train_loop
 
 
@@ -50,22 +51,22 @@ def run(arch: str, steps_n: int, kill_at: int, ckpt_dir: str) -> dict:
 
 def quorum_demo(n_dp: int = 8, quorum: float = 0.75) -> None:
     """Straggler mitigation on host devices: drop workers, commit anyway."""
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((len(jax.devices()),), ("data",))
 
     def step(contrib, grads):
         cnt = quorum_count(contrib, ("data",))
-        commit = quorum_commit(cnt, int(quorum * jax.lax.axis_size("data")))
+        commit = quorum_commit(cnt, int(quorum * compat.axis_size("data")))
         total = jax.lax.psum(jnp.where(contrib > 0, grads, 0.0), ("data",))
         return jnp.where(commit, elastic_mean(total, cnt), 0.0), cnt, commit
 
-    f = jax.jit(jax.shard_map(step, mesh=mesh,
-                              in_specs=(jax.sharding.PartitionSpec("data"),
-                                        jax.sharding.PartitionSpec("data")),
-                              out_specs=(jax.sharding.PartitionSpec("data"),
-                                         jax.sharding.PartitionSpec("data"),
-                                         jax.sharding.PartitionSpec("data")),
-                              axis_names={"data"}, check_vma=False))
+    f = jax.jit(compat.shard_map(
+        step, mesh=mesh,
+        in_specs=(jax.sharding.PartitionSpec("data"),
+                  jax.sharding.PartitionSpec("data")),
+        out_specs=(jax.sharding.PartitionSpec("data"),
+                   jax.sharding.PartitionSpec("data"),
+                   jax.sharding.PartitionSpec("data")),
+        axis_names={"data"}, check_vma=False))
     n = len(jax.devices())
     grads = jnp.arange(n, dtype=jnp.float32) + 1.0
     for alive in (n, max(1, int(n * 0.9)), max(1, int(n * 0.5))):

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import inc_agg
 from repro.core.inc_agg import IncAggConfig
@@ -260,7 +261,7 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
         return unf(new_p), {"master": unf(new_m), "m": unf(new_mm),
                             "v": unf(new_vv)}, metrics
 
-    step = jax.shard_map(
+    step = compat.shard_map(
         body, mesh=mesh,
         in_specs=(p_manual, {"master": o_manual, "m": o_manual,
                              "v": o_manual}, bspecs, P()),
@@ -427,7 +428,7 @@ def build_serve_step(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
 
         _, cache_manual, _ = _cache_manual_specs(cfg, shape, dp, False,
                                                  n_model)
-        step = jax.shard_map(body, mesh=mesh,
+        step = compat.shard_map(body, mesh=mesh,
                              in_specs=(p_manual, bspecs),
                              out_specs=(P(dp), cache_manual),
                              axis_names=set(manual), check_vma=False)
@@ -454,7 +455,7 @@ def build_serve_step(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
         return api.decode_step(prep(params), cfg, token, pos, cache,
                                seq_axes=seq_axes, param_gather=hook)
 
-    step = jax.shard_map(body, mesh=mesh,
+    step = compat.shard_map(body, mesh=mesh,
                          in_specs=(p_manual, tok_spec, P(), cache_manual),
                          out_specs=(tok_spec, cache_manual),
                          axis_names=set(manual), check_vma=False)

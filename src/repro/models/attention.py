@@ -21,6 +21,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.models.common import COMPUTE_DTYPE, apply_rope, dense_init
 
 NEG_INF = -1e30
@@ -233,7 +235,7 @@ class KVLayout:
             return jnp.int32(0)
         idx = 0
         for ax in self.seq_axes:
-            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            idx = idx * compat.axis_size(ax) + jax.lax.axis_index(ax)
         return (idx * self.length).astype(jnp.int32)
 
 

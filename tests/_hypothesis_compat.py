@@ -1,0 +1,97 @@
+"""Use hypothesis when installed; otherwise a deterministic seeded fallback.
+
+The property tests in this suite only need a small strategy vocabulary
+(integers / floats / lists / tuples / sampled_from). When hypothesis is
+absent, ``given`` degrades to running the test body over ``max_examples``
+pseudo-random examples drawn from a per-test seeded RNG (plus the range
+endpoints early on, which is where saturating arithmetic breaks), so the
+same properties still get exercised — just without shrinking.
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    def _integers(min_value: int, max_value: int) -> _Strategy:
+        def draw(rng):
+            if rng.random() < 0.1:
+                return rng.choice((min_value, max_value, 0 if
+                                   min_value <= 0 <= max_value else min_value))
+            return rng.randint(min_value, max_value)
+        return _Strategy(draw)
+
+    def _floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        def draw(rng):
+            if rng.random() < 0.1:
+                return rng.choice((min_value, max_value, 0.0))
+            return rng.uniform(min_value, max_value)
+        return _Strategy(draw)
+
+    def _lists(elements: _Strategy, min_size: int = 0,
+               max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in elements))
+
+    def _sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        integers = staticmethod(_integers)
+        floats = staticmethod(_floats)
+        lists = staticmethod(_lists)
+        tuples = staticmethod(_tuples)
+        sampled_from = staticmethod(_sampled_from)
+
+    def settings(max_examples: int = 50, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_compat_max_examples", 50)
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                example = None
+                try:
+                    for _ in range(n):
+                        example = tuple(s.draw(rng) for s in strategies)
+                        fn(*args, *example, **kwargs)
+                except BaseException:
+                    print(f"falsifying example: {fn.__name__}{example!r}")
+                    raise
+            # hide the example parameters from pytest's fixture resolution
+            # (hypothesis does the same: the wrapper takes no arguments)
+            del runner.__wrapped__
+            runner.__signature__ = inspect.Signature()
+            return runner
+        return deco

@@ -12,12 +12,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ShapeConfig, get_arch
+from repro import compat
 from repro.data import pipeline
 from repro.launch import steps
 from repro.models import api
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def grow(cache, cfg, batch, total):

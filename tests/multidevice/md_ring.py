@@ -11,16 +11,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import inc_agg, ring
 from repro.core.inc_agg import IncAggConfig
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 manual = ("pod", "data")
 
 
 def shmap(f, in_specs, out_specs):
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+    return jax.jit(compat.shard_map(f, mesh=mesh, in_specs=in_specs,
                                  out_specs=out_specs,
                                  axis_names=set(manual), check_vma=False))
 

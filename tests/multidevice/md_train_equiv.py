@@ -12,13 +12,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ShapeConfig, get_arch
+from repro import compat
 from repro.core.inc_agg import IncAggConfig
 from repro.data import pipeline
 from repro.launch import steps
 from repro.optim.adamw import AdamWConfig
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 shape = ShapeConfig("t", seq_len=64, global_batch=8, kind="train")
 opt_cfg = AdamWConfig(warmup_steps=2, total_steps=50)
 

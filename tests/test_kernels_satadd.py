@@ -8,7 +8,7 @@ value.
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.constants import INT32_MAX, INT32_MIN, SAT_MAX, SAT_MIN

@@ -2,10 +2,11 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.constants import INT32_MAX, SAT_MAX
+from repro.kernels.ops import sparse_addto_host
 from repro.kernels.sparse_addto import sparse_addto_pallas
 
 
@@ -30,6 +31,35 @@ def test_duplicate_keys_accumulate_in_order():
     assert int(out[3]) == INT32_MAX
     out2 = sparse_addto_pallas(regs, idx, val, interpret=True)
     assert int(out2[3]) == INT32_MAX
+
+
+@pytest.mark.parametrize("n,k", [(64, 16), (1024, 256)])
+def test_host_kernel_matches_ref(n, k):
+    """The numpy host-path kernel (ops.sparse_addto_host) is the data plane
+    off-TPU; it must be result-identical to the sequential oracle."""
+    rng = np.random.RandomState(7)
+    regs0 = rng.randint(-1000, 1000, n).astype(np.int32)
+    idx = rng.randint(0, n, k).astype(np.int32)
+    val = rng.randint(-100, 100, k).astype(np.int32)
+    want = np.asarray(ref.sparse_addto(jnp.asarray(regs0), jnp.asarray(idx),
+                                       jnp.asarray(val)))
+    got = sparse_addto_host(regs0.copy(), idx, val)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_host_kernel_saturation_order_and_sticky_sentinel():
+    # duplicate-key saturation: sequential order, sentinel sticks
+    regs0 = np.zeros(8, np.int32)
+    idx = np.array([3, 3, 3, 5], np.int32)
+    val = np.array([SAT_MAX - 1, 5, -5, 7], np.int32)
+    out = sparse_addto_host(regs0.copy(), idx, val)
+    assert int(out[3]) == INT32_MAX       # saturated, then sticky through -5
+    assert int(out[5]) == 7               # safe slot untouched by fallback
+    # starting from a sentinel register stays a sentinel
+    regs1 = np.full(4, INT32_MAX, np.int32)
+    out1 = sparse_addto_host(regs1.copy(), np.array([2], np.int32),
+                             np.array([-10], np.int32))
+    assert int(out1[2]) == INT32_MAX
 
 
 @settings(max_examples=50, deadline=None)

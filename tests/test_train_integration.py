@@ -14,14 +14,14 @@ from repro.checkpoint.store import CheckpointStore
 from repro.configs.base import ShapeConfig, get_arch
 from repro.core.inc_agg import IncAggConfig
 from repro.data import pipeline
+from repro import compat
 from repro.launch import steps
 from repro.optim.adamw import AdamWConfig
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def build(mesh, arch="qwen2.5-3b", inc_mode="netrpc"):

@@ -5,7 +5,7 @@ windows): under ANY loss pattern, every packet's side effect is applied
 EXACTLY once, using only w_max bits of per-flow switch state.
 """
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.transport import (AimdState, ClientFlow, FlipBitSwitch,
                                   LossyLink, Packet, flip_of, run_flow)
