@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench-batch
+.PHONY: test test-fast bench-batch bench-async
 
 # full tier-1 suite (includes the slow multidevice subprocess tests)
 test:
@@ -14,3 +14,7 @@ test-fast:
 # batched RPC data-plane sweep (calls/sec vs batch size)
 bench-batch:
 	python benchmarks/agg_goodput.py --batch
+
+# async runtime sweep: p50/p99 latency + throughput per auto-drain trigger
+bench-async:
+	python benchmarks/async_latency.py

@@ -1,0 +1,262 @@
+"""Async-runtime sweep: p50/p99 call latency vs throughput per trigger.
+
+The question PR 2's runtime must answer: does auto-drain (the scheduler
+picking batch boundaries) keep the explicit-``drain()`` goodput of PR 1
+while bounding tail latency for open-loop callers? Two sweeps over the
+same monitoring-style Push stream:
+
+  thr   open-loop: submit as fast as admission allows; calls/sec.
+  lat   paced arrivals at ``LOAD_FRACTION`` of the measured explicit-drain
+        capacity; per-call latency is arrival -> completion (completion
+        timestamped by the resolving thread via IncFuture callbacks).
+
+Modes:
+
+  seq       Stub.call per request — the batch=1 pipeline baseline.
+  explicit  NetRPC.submit + an explicit drain() every CHUNK calls (PR 1's
+            caller-scheduled front).
+  size      IncRuntime, size trigger only  (max_batch=CHUNK).
+  time      IncRuntime, time trigger only  (max_delay=1ms).
+  window    IncRuntime defaults: eager AIMD window trigger + size/time
+            backstops (backpressure-coupled adaptive batching).
+
+Acceptance (checked by the summary row): size or time auto-drain reaches
+>= 80% of explicit-drain throughput, and its paced p99 stays below the
+sequential baseline's p99 at the same offered load.
+
+    PYTHONPATH=src python -m benchmarks.async_latency [--n 2048] [--smoke]
+"""
+from __future__ import annotations
+
+if __package__ in (None, ""):            # executed as a bare script
+    import sys
+    from pathlib import Path
+    _root = Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))
+
+import time
+
+import numpy as np
+
+from repro.core.netfilter import NetFilter
+from repro.core.rpc import Field, NetRPC, Service
+from repro.core.runtime import DrainPolicy, IncRuntime
+
+KEYS_PER_CALL = 16
+CHUNK = 64                 # explicit-drain batch / size trigger
+LOAD_FRACTION = 0.8        # paced offered load vs explicit capacity
+
+
+def _service() -> Service:
+    svc = Service("AsyncBench")
+    svc.rpc("Push", [Field("kvs", "STRINTMap")], [Field("msg")],
+            NetFilter.from_dict({"AppName": "AB-1",
+                                 "addTo": "PushRequest.kvs"}))
+    return svc
+
+
+def _requests(n_calls: int, seed: int = 0) -> list[dict]:
+    rng = np.random.RandomState(seed)
+    return [{"kvs": {f"flow-{int(k)}": 1
+                     for k in rng.zipf(1.3, KEYS_PER_CALL) % 2048}}
+            for _ in range(n_calls)]
+
+
+def _policy(mode: str) -> DrainPolicy:
+    if mode == "size":
+        return DrainPolicy(max_batch=CHUNK, max_delay=5.0,
+                           eager_window=False)
+    if mode == "time":
+        return DrainPolicy(max_batch=1 << 20, max_delay=0.001,
+                           eager_window=False)
+    return DrainPolicy(max_batch=CHUNK)     # window: eager AIMD defaults
+
+
+def _fresh(mode: str):
+    if mode in ("seq", "explicit"):
+        rt = NetRPC()
+    else:
+        rt = IncRuntime(policy=_policy(mode))
+    return rt, rt.make_stub(_service(), n_slots=8192)
+
+
+def _close(rt) -> None:
+    if isinstance(rt, IncRuntime):
+        rt.close()
+
+
+# -- open-loop throughput -----------------------------------------------------
+
+def _warm(mode: str, rt, stub, req: dict) -> None:
+    """One out-of-band call before the clock starts: spawns the scheduler
+    thread (async modes) and touches every jit/kernel path, symmetrically
+    across modes."""
+    if mode == "seq":
+        stub.call("Push", req)
+    elif mode == "explicit":
+        rt.submit(stub, "Push", req)
+        rt.drain()
+    else:
+        stub.call_async("Push", req).result()
+
+
+def _thr_once(mode: str, reqs: list[dict]) -> tuple[float, float]:
+    import gc
+    rt, stub = _fresh(mode)
+    _warm(mode, rt, stub, reqs[0])
+    gc.collect()
+    gc.disable()     # same treatment for every mode (see agg_goodput)
+    try:
+        t0 = time.perf_counter()
+        if mode == "seq":
+            for r in reqs:
+                stub.call("Push", r)
+        elif mode == "explicit":
+            for i, r in enumerate(reqs):
+                rt.submit(stub, "Push", r)
+                if (i + 1) % CHUNK == 0:
+                    rt.drain()
+            rt.drain()
+        else:
+            futs = [stub.call_async("Push", r) for r in reqs]
+            for f in futs:
+                f.result()
+        dt = time.perf_counter() - t0
+        mean_b = stub.channels["Push"].stats.mean_drained_batch
+        return dt, mean_b
+    finally:
+        gc.enable()
+        _close(rt)
+
+
+def _thr(modes, reqs: list[dict], repeats: int) -> tuple[dict, dict]:
+    """(mode -> (fastest calls/sec, mean drained batch),
+        mode -> per-repeat wall times).
+
+    Repeats are interleaved round-robin across modes so a slow patch on
+    this (very jittery) container penalizes every mode alike instead of
+    whichever one its measurement window landed on; the acceptance gate
+    then compares *within-repeat* ratios (see run()).
+    """
+    best = {m: None for m in modes}
+    samples = {m: [] for m in modes}
+    for _ in range(repeats):
+        for m in modes:
+            dt, mean_b = _thr_once(m, reqs)
+            samples[m].append(dt)
+            if best[m] is None or dt < best[m][0]:
+                best[m] = (dt, mean_b)
+    return ({m: (len(reqs) / b[0], b[1]) for m, b in best.items()}, samples)
+
+
+# -- paced latency ------------------------------------------------------------
+
+def _lat(mode: str, reqs: list[dict], rate: float) -> np.ndarray:
+    """Per-call arrival->completion latency (s) at ``rate`` arrivals/s."""
+    import gc
+    rt, stub = _fresh(mode)
+    _warm(mode, rt, stub, reqs[0])
+    lat = np.zeros(len(reqs))
+    gc.collect()
+    gc.disable()
+    try:
+        pending = []
+        start = time.perf_counter()
+        for i, r in enumerate(reqs):
+            target = start + i / rate
+            delay = target - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            if mode == "seq":
+                stub.call("Push", r)
+                lat[i] = time.perf_counter() - target
+            elif mode == "explicit":
+                rt.submit(stub, "Push", r)
+                pending.append((i, target))
+                if len(pending) >= CHUNK:
+                    rt.drain()
+                    done = time.perf_counter()
+                    for j, arr in pending:
+                        lat[j] = done - arr
+                    pending = []
+            else:
+                fut = stub.call_async("Push", r)
+                fut.add_done_callback(
+                    lambda f, j=i, arr=target:
+                    lat.__setitem__(j, time.perf_counter() - arr))
+                pending.append(fut)
+        if mode == "explicit" and pending:
+            rt.drain()
+            done = time.perf_counter()
+            for j, arr in pending:
+                lat[j] = done - arr
+        elif mode not in ("seq", "explicit"):
+            for f in pending:
+                f.result()
+    finally:
+        gc.enable()
+        _close(rt)
+    return lat
+
+
+def run(n_calls: int = 2048, repeats: int = 5) -> list:
+    reqs = _requests(n_calls)
+    rows = []
+    # warm the kernel/jit caches once so no mode pays first-call costs
+    _thr_once("explicit", reqs[:4 * CHUNK])
+
+    modes = ("seq", "explicit", "size", "time", "window")
+    thr, samples = _thr(modes, reqs, repeats)
+    cps = {m: thr[m][0] for m in modes}
+    for mode in modes:
+        c, mean_b = thr[mode]
+        rows.append((f"t_async/thr/{mode}", round(1e6 / c, 1),
+                     f"calls_per_sec={c:.0f}"
+                     f" speedup_vs_seq={c / cps['seq']:.2f}x"
+                     f" mean_drained_batch={mean_b:.1f}"))
+
+    rate = LOAD_FRACTION * cps["explicit"]
+    p99 = {}
+    for mode in ("seq", "explicit", "size", "time", "window"):
+        lat = _lat(mode, reqs, rate) * 1e6
+        p99[mode] = float(np.percentile(lat, 99))
+        rows.append((f"t_async/lat/{mode}@{LOAD_FRACTION:.1f}x",
+                     round(float(np.percentile(lat, 50)), 1),
+                     f"p99_us={p99[mode]:.0f}"
+                     f" offered_cps={rate:.0f}"))
+
+    # a single trigger config must meet BOTH criteria (mixing the best
+    # throughput of one mode with the best p99 of another would certify a
+    # configuration that does not exist). The throughput ratio is the
+    # median of WITHIN-repeat ratios: comparing each mode's fastest-of-N
+    # instead would let one golden scheduling window for one mode decide
+    # the gate on this jittery container.
+    ratio = {m: float(np.median([e / a for e, a in
+                                 zip(samples["explicit"], samples[m])]))
+             for m in ("size", "time")}
+    passing = [m for m in ("size", "time")
+               if ratio[m] >= 0.8 and p99[m] < p99["seq"]]
+    best = max(("size", "time"), key=lambda m: ratio[m])
+    rows.append(("t_async/acceptance", 0,
+                 f"modes_meeting_both={passing or 'none'}"
+                 f" ({'PASS' if passing else 'FAIL'})"
+                 f" median_auto_vs_explicit={best}:{ratio[best]:.2f}"))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI (correct plumbing, noisy numbers)")
+    args = ap.parse_args()
+    n = 4 * CHUNK if args.smoke else args.n
+    for row in run(n, repeats=1 if args.smoke else args.repeats):
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

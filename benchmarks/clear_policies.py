@@ -34,6 +34,36 @@ def run():
                      f"mem_x={pol.stats.memory_multiplier};"
                      f"hops={pol.stats.roundtrip_hops}"))
 
+    # batched reply-path fold: a drained batch of B updates lands in ONE
+    # fused sat_add_batch pass instead of B addto dispatches. Measured at
+    # a register-segment size (where per-dispatch overhead dominates, the
+    # regime the RPC reply path lives in), not the Table-6 tensor size.
+    B, n_seg = 16, 4096
+    for policy in ("copy", "shadow", "lazy"):
+        qs = [jnp.asarray(rng.randint(-1000, 1000, n_seg).astype(np.int32))
+              for _ in range(B)]
+        pol = make_clear_policy(policy, n_seg)
+        pol.addto_batch(qs)                  # warm the fold jit
+        pol.read_and_clear()
+        t0 = time.perf_counter()
+        rounds = 20
+        for _ in range(rounds):
+            pol.addto_batch(qs)
+            pol.read_and_clear()
+        us = (time.perf_counter() - t0) / (rounds * B) * 1e6
+        pol2 = make_clear_policy(policy, n_seg)
+        pol2.addto(qs[0])
+        pol2.read_and_clear()
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for q in qs:
+                pol2.addto(q)
+            pol2.read_and_clear()
+        us_seq = (time.perf_counter() - t0) / (rounds * B) * 1e6
+        rows.append((f"t6/{policy}_batch{B}_n{n_seg}", round(us, 1),
+                     f"per_call_us_sequential={us_seq:.1f};"
+                     f"speedup={us_seq / max(us, 1e-9):.2f}x"))
+
     # lazy under overflow pressure
     for ratio in (0.0, 0.01, 0.1):
         pol = make_clear_policy("lazy", N)

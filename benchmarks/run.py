@@ -33,6 +33,7 @@ MODULES = [
     "multiswitch",        # Figure 13
     "clear_policies",     # Table 6
     "multi_app",          # Table 7
+    "async_latency",      # PR 2 auto-drain triggers (latency/throughput)
 ]
 
 

@@ -5,12 +5,20 @@ ElasticSketch analogue); a monitor process queries hot flows at any time.
 The cache-replacement policy keeps hot flows on the 'switch' and spills
 the long tail to the server agent.
 
+Probes are issued through the async front: each ``call_async`` returns an
+IncFuture immediately and the runtime's size trigger (16) coalesces probes
+into one INC-map kernel batch per drain — application code never schedules
+(or drains) anything. The Query is a plain synchronous call: the runtime
+drains queued probes first, so the read observes every probe issued
+before it.
+
     PYTHONPATH=src python -m examples.monitoring
 """
 import numpy as np
 
 from repro.core.netfilter import NetFilter
-from repro.core.rpc import Field, NetRPC, Service
+from repro.core.rpc import Field, Service
+from repro.core.runtime import DrainPolicy, IncRuntime
 
 
 def build_service() -> Service:
@@ -27,16 +35,17 @@ def build_service() -> Service:
 
 def main():
     svc = build_service()
-    rt = NetRPC()
+    rt = IncRuntime(policy=DrainPolicy(max_batch=16, max_delay=0.05,
+                                       eager_window=False))
     rt.server.register("MonitorCall", lambda req: {"payload": "ack"})
     probe = rt.make_stub(svc, n_slots=512)
 
-    # synthetic zipf traffic: a few elephant flows, many mice. Probes are
-    # micro-batched 16 at a time — one INC-map kernel batch per flush
-    # instead of one per probe.
+    # synthetic zipf traffic: a few elephant flows, many mice. Probes go
+    # through the futures front; the size trigger turns every 16 of them
+    # into one INC-map kernel batch.
     rng = np.random.RandomState(0)
     truth = {}
-    probes = []
+    futures = []
     for _ in range(200):
         flows = rng.zipf(1.4, 64) % 2000
         kvs = {}
@@ -44,20 +53,26 @@ def main():
             key = f"flow-{f}"
             kvs[key] = kvs.get(key, 0) + 1
             truth[key] = truth.get(key, 0) + 1
-        probes.append({"kvs": kvs, "payload": "probe"})
-    for i in range(0, len(probes), 16):
-        replies = probe.call_batch("MonitorCall", probes[i:i + 16])
-        assert all(r["payload"] == "ack" for r in replies)
+        futures.append(probe.call_async(
+            "MonitorCall", {"kvs": kvs, "payload": "probe"}))
 
+    # the monitor reads at any time; the inline Query drains queued probes
+    # first, so it observes all 200 probes
     reply = probe.call("Query", {"kvs": {k: 0 for k in truth}})
+    assert all(f.result()["payload"] == "ack" for f in futures)
     got = {k: int(v) for k, v in reply["kvs"].items()}
     assert got == truth
     hot = sorted(got.items(), key=lambda kv: -kv[1])[:5]
     srv = probe.agents["MonitorCall"].server
+    sched = rt.scheduling_report()["MON-1"]
     print("hot flows:", hot)
     print(f"flows tracked: {len(truth)}; switch slots: {srv.capacity}; "
           f"cache hit ratio: {srv.cache_hit_ratio:.3f}")
+    print(f"auto-drain: {sched['drained_calls']} probes in "
+          f"{sched['drained_batches']} batches (triggers {sched['drains']}), "
+          f"mean batch {sched['mean_drained_batch']}")
     print("== every counter exact (switch + host-spill fallback)")
+    rt.close()
 
 
 if __name__ == "__main__":

@@ -5,12 +5,18 @@ shaped service with one FPArray field and a NetFilter — and calls it from
 two clients. The network (the INC layer) aggregates; the reply arrives only
 after both clients contributed (CntFwd threshold=2), already summed.
 
+The calls are issued through the async front: ``call_async`` returns an
+IncFuture immediately and the runtime's auto-drain scheduler coalesces the
+two workers' calls (they share the DT-1 channel) into ONE pipeline batch —
+no explicit drain() anywhere, the runtime owns scheduling.
+
     PYTHONPATH=src python -m examples.quickstart
 """
 import numpy as np
 
 from repro.core.netfilter import NetFilter
-from repro.core.rpc import Field, NetRPC, Service
+from repro.core.rpc import Field, Service
+from repro.core.runtime import DrainPolicy, IncRuntime
 
 
 def main():
@@ -31,24 +37,30 @@ def main():
         }))
 
     # --- two workers push gradients; INC sums them -----------------------
-    runtime = NetRPC()
+    # size trigger = 2: the scheduler drains the shared channel the moment
+    # both workers' async calls are queued (time trigger as the backstop)
+    runtime = IncRuntime(policy=DrainPolicy(max_batch=2, max_delay=0.05,
+                                            eager_window=False))
     worker_a = runtime.make_stub(svc)
     worker_b = runtime.make_stub(svc)
 
     grad_a = np.array([0.125, -1.5, 3.25, 0.0])
     grad_b = np.array([1.0, 0.5, -0.25, 2.0])
 
-    # batch front: both workers submit; drain() coalesces the calls that
-    # share the DT-1 channel into ONE pass over the INC data plane
-    t_a = runtime.submit(worker_a, "Update", {"tensor": grad_a})
-    t_b = runtime.submit(worker_b, "Update", {"tensor": grad_b})
-    n = runtime.drain()
-    print(f"drained {n} calls in one channel batch")
+    # async front: both workers get their IncFuture back immediately; the
+    # auto-drain scheduler coalesces the two calls into ONE channel batch
+    f_a = worker_a.call_async("Update", {"tensor": grad_a})
+    f_b = worker_b.call_async("Update", {"tensor": grad_b})
     print("worker A reply (below threshold, dropped in-network):",
-          t_a.result())
-    agg = np.array([t_b.result()["tensor"][i] for i in range(4)])
+          f_a.result())
+    agg = np.array([f_b.result()["tensor"][i] for i in range(4)])
     print("worker B reply (aggregated):", agg)
     assert np.allclose(agg, grad_a + grad_b, atol=1e-6)
+    ch = worker_a.channels["Update"]
+    print(f"auto-drained {ch.stats.drained_calls} calls in "
+          f"{ch.stats.drained_batches} channel batch "
+          f"(triggers: {ch.stats.drain_triggers})")
+    assert ch.stats.drained_batches == 1
     print("== in-network sum matches", (grad_a + grad_b).tolist())
 
     # the sequential API is the same pipeline with batch size 1
@@ -58,6 +70,7 @@ def main():
         np.array([r2["tensor"][i] for i in range(4)]), grad_a + grad_b,
         atol=1e-6)
     print("== sequential call() round agrees")
+    runtime.close()
 
 
 if __name__ == "__main__":

@@ -34,4 +34,15 @@ if [ "$status" -ne 0 ]; then
     echo "FAST LANE: FAIL (pytest exit $status)"
     exit "$status"
 fi
+
+# smoke the async-runtime benchmark plumbing (tiny n; numbers not asserted)
+smoke_log=$(mktemp)
+if ! timeout 300 python -m benchmarks.async_latency --smoke > "$smoke_log" 2>&1; then
+    echo "FAST LANE: FAIL (async_latency smoke); output:"
+    cat "$smoke_log"
+    rm -f "$smoke_log"
+    exit 1
+fi
+rm -f "$smoke_log"
+echo "async_latency smoke: OK"
 echo "FAST LANE: OK"

@@ -24,6 +24,9 @@ from repro.core.inc_map import ClientAgent, ServerAgent, SwitchMemory
 from repro.core.netfilter import NetFilter
 
 
+DRAIN_TRIGGERS = ("size", "time", "window", "flush", "inline")
+
+
 @dataclass
 class ChannelStats:
     calls: int = 0
@@ -31,10 +34,41 @@ class ChannelStats:
     host_bytes: int = 0
     batches: int = 0          # pipeline passes (a batch of N calls is one)
     max_batch: int = 0        # largest coalesced batch seen
+    # caller-built passes (Stub.call / Stub.call_batch) vs runtime-coalesced
+    # drains (submit/call_async queues): a stream of N=1 explicit calls must
+    # not dilute the coalescing efficiency the drain counters report.
+    explicit_calls: int = 0
+    explicit_batches: int = 0
+    drained_calls: int = 0
+    drained_batches: int = 0
+    # async-runtime scheduling behavior (per-GAID): queue depth and which
+    # trigger fired each drain (see core/runtime.py)
+    queue_depth: int = 0
+    max_queue_depth: int = 0
+    drain_triggers: dict = field(
+        default_factory=lambda: {t: 0 for t in DRAIN_TRIGGERS})
+    admission_waits: int = 0  # submitters blocked by AIMD backpressure
 
     @property
     def mean_batch(self) -> float:
         return self.calls / self.batches if self.batches else 0.0
+
+    @property
+    def mean_explicit_batch(self) -> float:
+        return (self.explicit_calls / self.explicit_batches
+                if self.explicit_batches else 0.0)
+
+    @property
+    def mean_drained_batch(self) -> float:
+        return (self.drained_calls / self.drained_batches
+                if self.drained_batches else 0.0)
+
+    def note_queue_depth(self, depth: int) -> None:
+        self.queue_depth = depth
+        self.max_queue_depth = max(self.max_queue_depth, depth)
+
+    def note_trigger(self, trigger: str) -> None:
+        self.drain_triggers[trigger] = self.drain_triggers.get(trigger, 0) + 1
 
 
 class Channel:
@@ -56,6 +90,11 @@ class Channel:
         self.stats = ChannelStats()
         self.app_type = nf.app_type()
         self.pending: list = []
+        # the ordered update buffer of the pipeline pass currently
+        # executing on this channel (rpc._run_pipeline): a nested pass —
+        # a handler's inline follow-up call — flushes it on entry so it
+        # observes the enclosing pass's buffered addTo/clear updates
+        self.active_buf = None
 
     def client(self) -> ClientAgent:
         c = ClientAgent(self.server)

@@ -25,7 +25,11 @@ shared channel:
   - ``NetRPC.submit(stub, method, request)`` / ``NetRPC.drain()`` — a
     micro-batching queue that coalesces calls from *different* stubs and
     methods sharing a channel (the multi-application plane of Fig. 12)
-    into one pipeline run per channel.
+    into one pipeline run per channel;
+  - ``Stub.call_async(method, request) -> IncFuture`` — the async front:
+    returns immediately; the auto-drain scheduler of core/runtime.py
+    (IncRuntime) picks the batch boundaries via size/time/AIMD-window
+    triggers and resolves the future off-thread.
 
 Single-pipeline invariant: the batched execution preserves the sequential
 semantics — ``call_batch(reqs) == [call(r) for r in reqs]`` — by buffering
@@ -35,7 +39,9 @@ pre-batch counter values plus the in-batch increment order.  Two documented
 deviations, both value-preserving: cache-window boundaries (and hence LRU
 eviction instants) may differ because updates arrive in fewer, larger
 batches; and handlers must not read INC map state directly (an entry's
-addTo may still be buffered when its handler runs).
+addTo may still be buffered when its handler runs) — nested RPC calls are
+fine: a nested pipeline pass flushes the enclosing pass's buffer on entry
+(``Channel.active_buf``), so it observes everything issued before it.
 
 This module is deliberately framework-level (host-side, numpy): the
 device-resident SyncAgtr fast path is core/inc_agg.py; examples/paxos.py,
@@ -44,6 +50,7 @@ other app types on this layer with ~20 lines each.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -192,14 +199,32 @@ class _MapOpBuffer:
 
 
 def _run_pipeline(channel: Channel, host_server: Server,
-                  calls: list[_PlannedCall]) -> list[dict]:
+                  calls: list[_PlannedCall],
+                  source: str = "explicit") -> list[dict]:
     """THE data-plane pipeline. Every entry point (call / call_batch /
-    drain) lands here; N=1 is just a batch of one."""
+    drain) lands here; N=1 is just a batch of one.
+
+    ``source`` attributes the pass to the caller-built ("explicit") or the
+    runtime-coalesced ("drained") counters so coalescing efficiency is not
+    diluted by interleaved N=1 Stub.call passes on the same channel.
+    """
     server = channel.server
+    if channel.active_buf is not None:
+        # nested pass (a handler's inline follow-up call on its own
+        # channel): the enclosing pass's buffered updates — including
+        # deferred reply-path clears — happened-before this call, and
+        # re-reading pre-clear state here would double-apply the clear
+        channel.active_buf.flush()
     channel.touch()
     channel.stats.calls += len(calls)
     channel.stats.batches += 1
     channel.stats.max_batch = max(channel.stats.max_batch, len(calls))
+    if source == "drained":
+        channel.stats.drained_calls += len(calls)
+        channel.stats.drained_batches += 1
+    else:
+        channel.stats.explicit_calls += len(calls)
+        channel.stats.explicit_batches += 1
 
     # ---- phase 1: Stream.modify, fused across the batch --------------------
     for c in calls:
@@ -264,6 +289,8 @@ def _run_pipeline(channel: Channel, host_server: Server,
     # already took their turn keep their INC side effects — exactly as if
     # they had been issued sequentially before the failing call.
     buf = _MapOpBuffer(server)
+    prev_buf = channel.active_buf          # enclosing pass when nested
+    channel.active_buf = buf
     try:
         for c in calls:
             if c.logs is not None:
@@ -298,12 +325,22 @@ def _run_pipeline(channel: Channel, host_server: Server,
                     # copy: values are already backed up server-side (the
                     # read above); shadow/lazy semantics are exercised on
                     # the device path (core/clear_policy.py) — here clear
-                    # empties the map.
+                    # empties the map. The clear rides the ordered update
+                    # buffer instead of issuing its own kernel pass: the
+                    # next Map.get (or the final flush) applies it together
+                    # with any interleaved addTo — one reply-path pass per
+                    # flush, not one per cleared call. No earlier observer
+                    # exists: handlers must not read INC state, CntFwd
+                    # counters live on disjoint keys, every later get
+                    # flushes first, and a nested pass (handler inline
+                    # call) flushes this buffer on entry via
+                    # channel.active_buf.
                     nz = raw != 0
                     if nz.any():
-                        server.addto_batch(logs[nz], -raw[nz])
+                        buf.addto(logs[nz], -raw[nz])
             c.completed = True
     finally:
+        channel.active_buf = prev_buf
         buf.flush()
     return [c.reply for c in calls]
 
@@ -314,10 +351,11 @@ class Stub:
     """The compiled client stub: user code is identical to vanilla gRPC."""
 
     def __init__(self, service: Service, channels: dict[str, Channel],
-                 server: Server):
+                 server: Server, runtime: "NetRPC"):
         self.service = service
         self.channels = channels          # method -> Channel
         self.server = server
+        self.runtime = runtime            # owning NetRPC / IncRuntime
         self.agents = {m: ch.client() for m, ch in channels.items()}
 
     def _plan(self, method: str, request: dict) -> _PlannedCall:
@@ -332,13 +370,13 @@ class Stub:
         pass; replies are positionally aligned with ``requests``."""
         if not requests:
             return []
-        ch = self.channels[method]
-        if ch.pending:
-            # calls queued via submit() were issued first — execute them
-            # before this batch so issue order is preserved on the channel
-            _drain_channel(ch, self.server)
-        return _run_pipeline(ch, self.server,
-                             [self._plan(method, r) for r in requests])
+        return self.runtime.run_direct(self, method, requests)
+
+    def call_async(self, method: str, request: dict) -> "IncFuture":
+        """Enqueue one call and return immediately with its IncFuture; the
+        async runtime (core/runtime.py) drains the channel when a size,
+        time, or congestion-window trigger fires."""
+        return self.runtime.call_async(self, method, request)
 
 
 # -- runtime -----------------------------------------------------------------
@@ -353,7 +391,8 @@ def _drain_channel(ch: Channel, host_server: Server) -> int:
         return 0
     n = 0
     try:
-        _run_pipeline(ch, host_server, [p for _, p in entries])
+        _run_pipeline(ch, host_server, [p for _, p in entries],
+                      source="drained")
     finally:
         for t, p in entries:
             if p.completed:
@@ -385,6 +424,96 @@ class Ticket:
         return self.reply
 
 
+class IncFuture:
+    """Completion handle for one async INC call (Stub.call_async).
+
+    Resolved off-thread by the auto-drain scheduler (core/runtime.py).
+    ``result()`` blocks until the call's batch drains, re-raising the
+    handler exception if its batch failed mid-flight: the failing call gets
+    the original exception; calls queued behind it in the same batch get a
+    "call abandoned" RuntimeError chained to it (the same sequential error
+    semantics as Ticket). Waiting on an unresolved future signals demand to
+    the scheduler, so a caller that needs the reply *now* never waits out
+    the full time trigger.
+    """
+
+    __slots__ = ("_done", "_reply", "_exc", "_wake", "_event", "_callbacks")
+
+    # one lock for ALL futures: the critical sections are a few attribute
+    # flips, and futures are created on the submission hot path where even
+    # a single allocate_lock per call measurably drags; the Event is
+    # created lazily by the first thread that actually blocks.
+    _lock = threading.Lock()
+
+    def __init__(self, wake: Callable[[], None] | None = None):
+        self._done = False
+        self._reply: dict | None = None
+        self._exc: BaseException | None = None
+        self._wake = wake                # demand-flush hook set by the runtime
+        self._event: threading.Event | None = None
+        self._callbacks: list[Callable[["IncFuture"], None]] | None = None
+
+    def done(self) -> bool:
+        return self._done
+
+    def set_result(self, reply: dict) -> None:
+        self._reply = reply
+        self._finish()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._finish()
+
+    def _finish(self) -> None:
+        with self._lock:
+            self._done = True
+            ev = self._event
+            callbacks, self._callbacks = self._callbacks, None
+        if ev is not None:
+            ev.set()
+        for cb in callbacks or ():
+            try:
+                cb(self)
+            except Exception:    # a callback must not break the resolver
+                pass
+
+    def add_done_callback(self, fn: Callable[["IncFuture"], None]) -> None:
+        """Run ``fn(future)`` on resolution (immediately if already done).
+        Callbacks run on the resolving thread — keep them cheap."""
+        with self._lock:
+            if not self._done:
+                if self._callbacks is None:
+                    self._callbacks = []
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def _wait(self, timeout: float | None) -> bool:
+        if self._done:
+            return True
+        if self._wake is not None:
+            self._wake()
+        with self._lock:
+            if self._done:
+                return True
+            if self._event is None:
+                self._event = threading.Event()
+            ev = self._event
+        return ev.wait(timeout)
+
+    def result(self, timeout: float | None = None) -> dict:
+        if not self._wait(timeout):
+            raise TimeoutError("INC call did not complete in time")
+        if self._exc is not None:
+            raise self._exc
+        return self._reply
+
+    def exception(self, timeout: float | None = None) -> BaseException | None:
+        if not self._wait(timeout):
+            raise TimeoutError("INC call did not complete in time")
+        return self._exc
+
+
 class NetRPC:
     """In-process NetRPC runtime: controller + switch + agents.
 
@@ -412,7 +541,23 @@ class NetRPC:
             else:
                 ch = self.controller.register(md.netfilter, n_slots)
             channels[mname] = ch
-        return Stub(service, channels, self.server)
+        return Stub(service, channels, self.server, runtime=self)
+
+    def run_direct(self, stub: Stub, method: str,
+                   requests: list[dict]) -> list[dict]:
+        """Synchronous pipeline pass for Stub.call/call_batch. Queued calls
+        issued earlier on the channel (via submit()) execute first so issue
+        order is preserved."""
+        ch = stub.channels[method]
+        if ch.pending:
+            _drain_channel(ch, self.server)
+        return _run_pipeline(ch, self.server,
+                             [stub._plan(method, r) for r in requests])
+
+    def call_async(self, stub: Stub, method: str, request: dict) -> IncFuture:
+        raise RuntimeError(
+            "call_async needs the auto-drain scheduler; construct the "
+            "runtime as repro.core.runtime.IncRuntime instead of NetRPC")
 
     def submit(self, stub: Stub, method: str, request: dict) -> Ticket:
         ch = stub.channels[method]

@@ -1,0 +1,482 @@
+"""Async INC runtime: futures, auto-drain scheduling, and backpressure-
+coupled micro-batching (paper §5).
+
+PR 1 built the batched data plane but left *scheduling* to the caller:
+goodput needed an explicit ``NetRPC.drain()`` in application code. This
+module moves that burden into the runtime, the way §3.2/§5 describe the
+shared INC plane: applications issue ordinary async RPCs
+(``Stub.call_async -> IncFuture``) and the platform decides when a
+channel's queue becomes a pipeline batch.
+
+A single scheduler thread watches every channel queue and drains one when
+any of three triggers fires — each the in-process analogue of a §5 flow-
+control mechanism:
+
+  size    the queue reached ``DrainPolicy.max_batch`` calls: the line-rate
+          coalescing window is full (§5's batched RIP execution — one
+          sparse_addto kernel batch per register segment instead of one
+          round trip per call).
+  time    the oldest queued call aged past ``max_delay``: the bounded-
+          delay flush that keeps p99 latency finite at low offered load
+          (the reliability timer of §5.1 repurposed as a batching
+          deadline).
+  window  the transport's AIMD congestion window (core/transport.py) has
+          room for the whole queue: ship it now rather than hold latency.
+          The simulated switch ingress queue (occupancy, serviced at
+          ``service_rate`` calls/s) marks ECN above ``ecn_threshold``
+          exactly like FlipBitSwitch does on the wire (§5.1: ECN persisted
+          so loss cannot erase it); each drained batch acks the window, so
+          congestion halves ``cw`` (multiplicative decrease) and shrinks
+          both the per-drain take and the admission bound.
+
+Backpressure closes the loop: ``call_async`` blocks once a channel's
+backlog exceeds ``backlog_factor * cw`` — admission throttles at the
+sender, queues stay bounded, and a congested switch propagates all the way
+back to the producing thread instead of to unbounded memory growth. (The
+scheduler thread itself is exempt, so a server handler may submit
+follow-up calls without deadlocking its own drain.)
+
+Completion runs off-thread: the scheduler resolves each call's IncFuture
+after its batch executes, preserving PR 1's sequential-equivalence and
+mid-batch-failure semantics — completed calls keep their INC side effects
+and resolve; the failing call's future re-raises the handler exception;
+calls queued behind it in the same batch resolve to a chained "abandoned"
+error.
+
+Synchronous fronts stay available and ordered: ``Stub.call`` /
+``call_batch`` on an IncRuntime stub first drain the channel's queued
+async calls (issue order is preserved on the channel), then run inline.
+``drain()`` still exists but now means *flush everything synchronously*;
+application code never needs it — the runtime owns scheduling.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+
+from repro.core.channel import Channel
+from repro.core.rpc import IncFuture, NetRPC, Stub, _run_pipeline
+from repro.core.transport import AimdState, W_MAX_DEFAULT
+
+
+@dataclass
+class DrainPolicy:
+    """Trigger knobs for the auto-drain scheduler (see module docstring)."""
+    max_batch: int = 64            # size trigger / per-drain take cap
+    max_delay: float = 0.002       # time trigger, seconds
+    eager_window: bool = True      # window trigger enabled
+    backlog_factor: int = 4        # admission bound = backlog_factor * cw
+    ecn_threshold: int = 192       # switch occupancy that marks ECN
+    service_rate: float = 200_000.0  # simulated switch drain, calls/s
+    w_max: int = W_MAX_DEFAULT     # AIMD window cap
+    cw_init: int | None = None     # initial window; None -> the batch target
+                                   # (AIMD halves it on ECN, so congestion —
+                                   # not slow-start — sets the steady state)
+
+    def initial_cw(self) -> int:
+        cw = self.cw_init if self.cw_init is not None else self.max_batch
+        return max(1, min(cw, self.w_max))
+
+    def backlog_limit(self, cw: int) -> int:
+        return max(self.max_batch, self.backlog_factor * cw)
+
+
+class _ChannelQueue:
+    """Scheduler state for one channel (GAID)."""
+
+    __slots__ = ("channel", "entries", "aimd", "occupancy", "busy_owner",
+                 "demand", "last_service", "backlog_limit", "wake")
+
+    def __init__(self, channel: Channel, policy: DrainPolicy, now: float):
+        self.channel = channel
+        self.wake = None                   # demand hook, set by the runtime
+        self.entries: deque = deque()      # (IncFuture, _PlannedCall, ts)
+        self.aimd = AimdState(cw=policy.initial_cw(), cw_max=policy.w_max)
+        self.occupancy = 0.0               # simulated switch ingress queue
+        self.busy_owner = None             # thread running a live drain
+        self.demand = False                # a waiter needs a flush now
+        self.last_service = now
+        # cached admission bound, refreshed whenever AIMD moves cw (the
+        # submission path checks it per call)
+        self.backlog_limit = policy.backlog_limit(self.aimd.cw)
+
+    def room(self) -> int:
+        return max(0, self.aimd.cw - int(self.occupancy))
+
+
+class IncRuntime(NetRPC):
+    """NetRPC with the auto-drain scheduler attached.
+
+    Usage::
+
+        rt = IncRuntime()                  # or IncRuntime(policy=...)
+        stub = rt.make_stub(svc)
+        fut = stub.call_async("Push", {...})   # returns immediately
+        ...
+        reply = fut.result()               # blocks only until its batch drains
+        rt.close()                         # or: with IncRuntime() as rt: ...
+
+    One scheduler thread serves every channel; pipeline passes (scheduled
+    drains AND inline Stub.call paths) serialize on a single plane lock, so
+    the host data plane never runs concurrently with itself.
+    """
+
+    def __init__(self, controller=None, policy: DrainPolicy | None = None,
+                 clock=time.monotonic):
+        super().__init__(controller)
+        self.policy = policy or DrainPolicy()
+        self._clock = clock
+        self._queues: dict[int, _ChannelQueue] = {}
+        # plain Lock: nothing re-acquires _work while holding it, and the
+        # submission path pays for every acquire
+        self._work = threading.Condition(threading.Lock())
+        self._plane = threading.RLock()     # serializes pipeline passes;
+        #                                     re-entrant for handler calls
+        self._tls = threading.local()       # in_pipeline depth per thread
+        self._thread: threading.Thread | None = None
+        self._closed = False
+
+    def _in_pipeline(self) -> bool:
+        """True when the calling thread is inside a pipeline pass (i.e. a
+        server handler). Such a thread holds the plane lock, so it must
+        never wait on busy flags or admission — another thread's drain
+        could be blocked on the plane lock it holds (deadlock cycle)."""
+        return getattr(self._tls, "depth", 0) > 0
+
+    def _run_plane(self, fn):
+        """Run ``fn`` under the plane lock with the re-entrancy marker."""
+        with self._plane:
+            self._tls.depth = getattr(self._tls, "depth", 0) + 1
+            try:
+                return fn()
+            finally:
+                self._tls.depth -= 1
+
+    # -- async front ---------------------------------------------------------
+
+    def call_async(self, stub: Stub, method: str, request: dict) -> IncFuture:
+        ch = stub.channels[method]
+        planned = stub._plan(method, request)
+        with self._work:
+            if self._closed:
+                raise RuntimeError("runtime is closed")
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._loop, name="inc-runtime-drain", daemon=True)
+                self._thread.start()
+            q = self._queues.get(ch.gaid)
+            if q is None:
+                q = self._queues[ch.gaid] = _ChannelQueue(
+                    ch, self.policy, self._clock())
+                gaid = ch.gaid
+                q.wake = lambda: self._demand(gaid)
+            # admission backpressure: a shrunk congestion window bounds the
+            # backlog a producer may build before it blocks. Handlers (any
+            # thread inside a pipeline) are exempt: they hold the plane
+            # lock the draining thread would need, so waiting deadlocks.
+            if (len(q.entries) >= q.backlog_limit
+                    and threading.current_thread() is not self._thread
+                    and not self._in_pipeline()):
+                ch.stats.admission_waits += 1
+                while (len(q.entries) >= q.backlog_limit
+                       and not self._closed):
+                    self._work.wait()
+                if self._closed:
+                    raise RuntimeError("runtime is closed")
+            fut = IncFuture(wake=q.wake)
+            q.entries.append((fut, planned, self._clock()))
+            n = len(q.entries)
+            ch.stats.note_queue_depth(n)
+            # wake the scheduler only at trigger boundaries — the first
+            # entry (arms the time trigger / window check) and the size
+            # threshold. Waking it per enqueue would make every submission
+            # pay a GIL+lock round trip with the drain thread.
+            if n == 1 or n == self.policy.max_batch or q.demand:
+                self._work.notify_all()
+        return fut
+
+    def submit(self, stub: Stub, method: str, request: dict) -> IncFuture:
+        """On the async runtime submit() IS call_async: the returned
+        IncFuture resolves when a trigger drains the channel — no explicit
+        drain() needed (result() blocks until then)."""
+        return self.call_async(stub, method, request)
+
+    # -- synchronous fronts (ordering-preserving) ----------------------------
+
+    def run_direct(self, stub: Stub, method: str,
+                   requests: list[dict]) -> list[dict]:
+        me = threading.current_thread()
+        if me is self._thread or self._in_pipeline():
+            # nested inline call from a server handler (scheduler thread,
+            # or any thread already inside a pipeline pass): never wait on
+            # busy flags — this thread may own one, and even on another
+            # channel the flag's owner could be blocked on the plane lock
+            # this thread holds (deadlock cycle) — run the pass directly;
+            # the plane lock is re-entrant
+            return self._run_plane(
+                lambda: super(IncRuntime, self).run_direct(stub, method,
+                                                           requests))
+        ch = stub.channels[method]
+        with self._work:
+            q = self._queues.get(ch.gaid)
+            if q is not None:
+                while q.busy_owner is not None:
+                    self._work.wait()
+                q.busy_owner = me
+                backlog = list(q.entries)
+                q.entries.clear()
+                ch.stats.note_queue_depth(0)
+        if q is None:
+            return self._run_plane(
+                lambda: super(IncRuntime, self).run_direct(stub, method,
+                                                           requests))
+        try:
+            if backlog:
+                # async calls issued before this inline call run first
+                exc = self._execute(q, backlog, "inline")
+                if exc is not None:
+                    raise exc
+            return self._run_plane(
+                lambda: super(IncRuntime, self).run_direct(stub, method,
+                                                           requests))
+        finally:
+            with self._work:
+                q.busy_owner = None
+                if not q.entries:
+                    q.demand = False
+                self._work.notify_all()
+
+    def drain(self) -> int:
+        """Flush every channel queue synchronously; returns calls resolved.
+
+        Unlike NetRPC.drain, exceptions are delivered through the affected
+        IncFutures first; the first one is re-raised after every channel
+        has been flushed.
+        """
+        if threading.current_thread() is self._thread:
+            raise RuntimeError(
+                "drain() inside a server handler would deadlock the drain "
+                "worker; handlers may only call_async follow-up work")
+        n = 0
+        first_exc = None
+        with self._work:
+            queues = list(self._queues.values())
+        for q in queues:
+            with self._work:
+                while q.busy_owner is not None:
+                    self._work.wait()
+                if not q.entries:
+                    continue
+                q.busy_owner = threading.current_thread()
+                backlog = list(q.entries)
+                q.entries.clear()
+                q.channel.stats.note_queue_depth(0)
+            try:
+                exc = self._execute(q, backlog, "flush")
+            finally:
+                with self._work:
+                    q.busy_owner = None
+                    q.demand = False
+                    self._work.notify_all()
+            n += sum(1 for _, p, _ in backlog if p.completed)
+            first_exc = first_exc or exc
+        n += self._run_plane(super().drain)   # base-class ch.pending queues
+        if first_exc is not None:
+            raise first_exc
+        return n
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self, flush: bool = True) -> None:
+        """Stop the scheduler; by default flush outstanding work first.
+        Queued-but-unflushed futures (flush=False) resolve to an error."""
+        if flush:
+            try:
+                self.drain()
+            except BaseException:
+                # the flush's call outcomes (including this exception) are
+                # already delivered through the affected IncFutures; the
+                # shutdown itself must still complete
+                pass
+        with self._work:
+            self._closed = True
+            leftovers = [e for q in self._queues.values() for e in q.entries]
+            for q in self._queues.values():
+                q.entries.clear()
+            self._work.notify_all()
+        for fut, _, _ in leftovers:
+            fut.set_exception(RuntimeError("runtime closed before drain"))
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self) -> "IncRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(flush=exc[0] is None)
+
+    # -- observability -------------------------------------------------------
+
+    def scheduling_report(self) -> dict:
+        """Per-GAID scheduling behavior of the multi-tenant plane."""
+        out = {}
+        with self._work:
+            for gaid, q in self._queues.items():
+                st = q.channel.stats
+                out[q.channel.netfilter.app_name] = {
+                    "gaid": gaid,
+                    "queue_depth": len(q.entries),
+                    "max_queue_depth": st.max_queue_depth,
+                    "cw": q.aimd.cw,
+                    "occupancy": round(q.occupancy, 1),
+                    "drains": dict(st.drain_triggers),
+                    "drained_calls": st.drained_calls,
+                    "drained_batches": st.drained_batches,
+                    "mean_drained_batch": round(st.mean_drained_batch, 2),
+                    "admission_waits": st.admission_waits,
+                }
+        return out
+
+    # -- scheduler internals -------------------------------------------------
+
+    def _demand(self, gaid: int) -> None:
+        """IncFuture.result() on an unresolved future: flush its channel
+        now instead of waiting out the time trigger."""
+        if (threading.current_thread() is self._thread
+                or self._in_pipeline()):
+            raise RuntimeError(
+                "IncFuture.result() inside a server handler would deadlock "
+                "the data plane; handlers must not wait on futures")
+        with self._work:
+            q = self._queues.get(gaid)
+            if q is not None and q.entries:
+                q.demand = True
+                self._work.notify_all()
+
+    def _service(self, q: _ChannelQueue, now: float) -> None:
+        """Decay the simulated switch ingress queue (continuous service)."""
+        dt = max(0.0, now - q.last_service)
+        q.last_service = now
+        q.occupancy = max(0.0, q.occupancy - dt * self.policy.service_rate)
+
+    def _due(self, q: _ChannelQueue, now: float):
+        """(trigger, take) if this queue should drain now, else None."""
+        n = len(q.entries)
+        if n == 0 or q.busy_owner is not None:
+            return None
+        room = q.room()
+        take = min(n, self.policy.max_batch, room)
+        if take > 0:
+            if n >= self.policy.max_batch:
+                return ("size", take)
+            if q.demand:
+                return ("flush", take)
+            if now - q.entries[0][2] >= self.policy.max_delay:
+                return ("time", take)
+        if self.policy.eager_window and n <= room:
+            return ("window", n)
+        return None
+
+    def _next_wake(self, now: float) -> float | None:
+        """Seconds until the earliest time trigger or window-room event."""
+        best = None
+        for q in self._queues.values():
+            if not q.entries or q.busy_owner is not None:
+                continue
+            cand = q.entries[0][2] + self.policy.max_delay - now
+            if q.room() == 0:
+                # no drain can happen before the simulated switch services
+                # one packet of window room, however overdue the time
+                # trigger is — sleeping shorter would busy-poll the scan
+                decay = (q.occupancy - q.aimd.cw + 1) \
+                    / self.policy.service_rate
+                cand = max(cand, decay)
+            best = cand if best is None else min(best, cand)
+        if best is None:
+            return None
+        return max(best, 1e-4)
+
+    def _loop(self) -> None:
+        while True:
+            with self._work:
+                due = None
+                while due is None:
+                    if self._closed:
+                        return
+                    now = self._clock()
+                    for q in sorted((q for q in self._queues.values()
+                                     if q.entries and q.busy_owner is None),
+                                    key=lambda q: q.entries[0][2]):
+                        self._service(q, now)
+                        hit = self._due(q, now)
+                        if hit is not None:
+                            due = (q, *hit)
+                            break
+                    if due is None:
+                        self._work.wait(self._next_wake(now))
+                q, trigger, take = due
+                batch = [q.entries.popleft() for _ in range(take)]
+                q.busy_owner = threading.current_thread()
+                q.channel.stats.note_queue_depth(len(q.entries))
+            try:
+                self._execute(q, batch, trigger)
+            except BaseException:
+                # futures carry the call outcome; nothing here may kill the
+                # scheduler thread (producers block on it for admission)
+                pass
+            finally:
+                with self._work:
+                    q.busy_owner = None
+                    if not q.entries:
+                        q.demand = False
+                    self._work.notify_all()
+
+    def _execute(self, q: _ChannelQueue, entries, trigger: str):
+        """One pipeline pass for ``entries``; resolves futures; returns the
+        pipeline exception (already delivered to futures) or None."""
+        ch = q.channel
+        exc = None
+        t_start = self._clock()
+        try:
+            self._run_plane(lambda: _run_pipeline(
+                ch, self.server, [p for _, p, _ in entries],
+                source="drained"))
+        except BaseException as e:          # delivered via futures below
+            exc = e
+        with self._work:
+            # the batch entered the switch when the drain started and was
+            # serviced *during* it — credit arrivals before decaying over
+            # the drain interval, so ECN reflects sustained overload (load
+            # beyond service_rate), not the burst shape of one batch
+            self._service(q, t_start)
+            q.occupancy += len(entries)
+            self._service(q, self._clock())
+            # one ACK per batch; ECN set iff the simulated ingress queue is
+            # above threshold (persisted implicitly: occupancy only decays
+            # through service, as the transport persists ECN in the map)
+            q.aimd.on_ack(q.occupancy >= self.policy.ecn_threshold)
+            q.backlog_limit = self.policy.backlog_limit(q.aimd.cw)
+            ch.stats.note_trigger(trigger)
+        # if every call completed yet the pipeline still raised, the
+        # failure came from the trailing buffer flush — charge it to the
+        # last call (whose flush it would have been in a sequential
+        # replay) so it cannot vanish: the scheduler loop deliberately
+        # swallows the return value
+        all_done = exc is not None and all(p.completed for _, p, _ in entries)
+        failed = False
+        for i, (fut, p, _) in enumerate(entries):
+            if p.completed and not (all_done and i == len(entries) - 1):
+                fut.set_result(p.reply)
+            elif not failed:
+                failed = True               # the call whose turn raised
+                fut.set_exception(exc)
+            else:
+                err = RuntimeError(
+                    "call abandoned: its batch raised before this call "
+                    "completed; resubmit it")
+                err.__cause__ = exc
+                fut.set_exception(err)
+        return exc

@@ -92,6 +92,71 @@ def sat_add(a: jax.Array, b: jax.Array,
     return _from_tiles(s, n).reshape(shape)
 
 
+@jax.jit
+def _sat_add_batch_scan(acc: jax.Array, qs: jax.Array) -> jax.Array:
+    return jax.lax.scan(lambda a, q: (ref.sat_add(a, q), None), acc, qs)[0]
+
+
+@jax.jit
+def _sat_add_batch_fast(acc: jax.Array, qs: jax.Array):
+    """(all_lanes_safe, plain int32 fold). A lane is safe when |acc| plus
+    the batch's absolute mass cannot reach the sentinel region: then no
+    prefix of the sequential fold can saturate (and no input can be a
+    sentinel, whose magnitude alone exceeds SAT_MAX), so the fold is the
+    plain sum — one fused reduction instead of a B-step scan.
+
+    int64 is unavailable under the default jax_enable_x64=False, so the
+    mass bound runs in float32 with a conservative rounding margin (a
+    false "unsafe" only costs the scan fallback). When safe, every partial
+    sum in any association order is bounded by the mass, so the int32 sum
+    cannot wrap and is exact.
+    """
+    mass = (jnp.abs(acc.astype(jnp.float32))
+            + jnp.abs(qs.astype(jnp.float32)).sum(0))
+    margin = 1.0 + (qs.shape[0] + 1) * 2.0 ** -24
+    safe = mass * margin <= float(SAT_MAX)
+    return jnp.all(safe), acc + qs.sum(0)
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def _sat_add_batch_tpu(acc: jax.Array, qs: jax.Array,
+                       block_rows: int) -> jax.Array:
+    shape = acc.shape
+    ta, n = _to_tiles(acc.reshape(-1), block_rows)
+
+    def body(a, q):
+        tq, _ = _to_tiles(q.reshape(-1), block_rows)
+        return sat_add_pallas(a, tq, block_rows=block_rows,
+                              interpret=_interpret()), None
+
+    out, _ = jax.lax.scan(body, ta, qs)
+    return _from_tiles(out, n).reshape(shape)
+
+
+def sat_add_batch(acc: jax.Array, qs: jax.Array,
+                  block_rows: int = DEFAULT_BLOCK_ROWS) -> jax.Array:
+    """Fold a stacked batch of updates into ``acc`` in ONE fused dispatch.
+
+    ``qs`` has one extra leading dim over ``acc``. Result-identical to the
+    sequential fold ``for q in qs: acc = sat_add(acc, q)`` — the fold is a
+    lax.scan inside a single jit, so sticky-sentinel order is preserved
+    while a drained batch of N reply-path updates costs one dispatch
+    instead of N (the batched clear path of core/clear_policy.py).
+    """
+    qs = jnp.asarray(qs, jnp.int32)
+    if qs.ndim == jnp.asarray(acc).ndim:        # single update, no batch dim
+        return sat_add(acc, qs, block_rows)
+    if qs.shape[0] == 1:
+        return sat_add(acc, qs[0], block_rows)
+    if not use_pallas():
+        acc = jnp.asarray(acc, jnp.int32)
+        ok, fast = _sat_add_batch_fast(acc, qs)
+        if bool(ok):          # host path: the sync is a numpy read
+            return fast
+        return _sat_add_batch_scan(acc, qs)
+    return _sat_add_batch_tpu(acc, qs, block_rows=block_rows)
+
+
 def _sat_add_scalar(a: int, b: int) -> int:
     """Exact scalar ref.sat_add: sticky sentinels (a's wins), then the
     wrapped-add overflow reconstruction on the true integer sum."""

@@ -48,6 +48,10 @@ def serve(*, arch: str, prompt_len: int, decode_n: int, batch: int,
     b = pipeline.make_batch(dcfg, 0)
     b = pipeline.add_modality_stubs(b, cfg, batch)
 
+    # serve telemetry on the async INC runtime: per-token counters enqueue
+    # on the decode path and coalesce off-thread (never a blocking INC call)
+    telemetry = steps.TrainTelemetry(app_prefix="serve")
+
     t0 = time.time()
     logits, cache = pf.fn(params, b)
     # grow the prefill cache (length prompt_len) to the decode length by
@@ -60,17 +64,28 @@ def serve(*, arch: str, prompt_len: int, decode_n: int, batch: int,
     cache = jax.tree.map(grow, cache, api.cache_specs(cfg, batch, total))
     t1 = time.time()
     toks = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    tprev = time.time()
     for i in range(decode_n):
         pos = jnp.int32(prompt_len + i)
         logits, cache = dec.fn(params, toks[-1], pos, cache)
         toks.append(jnp.argmax(logits, -1).astype(jnp.int32))
+        tnow = time.time()
+        telemetry.push({"decode_tokens": batch,
+                        "decode_ms_sum": (tnow - tprev) * 1e3})
+        tprev = tnow
     t2 = time.time()
     out = jnp.stack(toks, axis=1)
+    inc = telemetry.finish()
+    got = inc["metrics"]
     print(f"prefill {prompt_len} tokens x{batch}: {t1 - t0:.2f}s; "
           f"decode {decode_n} tokens: {t2 - t1:.2f}s "
           f"({decode_n / max(t2 - t1, 1e-9):.1f} tok/s)")
+    sched = inc["scheduling"].get("serve-metrics", {})
+    print(f"inc telemetry: tokens={got.get('decode_tokens', 0):.0f} "
+          f"mean_step_ms={got.get('decode_ms_sum', 0.0) / max(decode_n, 1):.1f} "
+          f"mean_drained_batch={sched.get('mean_drained_batch', 0)}")
     print("sampled token ids[0]:", list(map(int, out[0][:16])))
-    return {"tokens": out}
+    return {"tokens": out, "inc_telemetry": inc}
 
 
 def main() -> None:

@@ -37,11 +37,129 @@ from repro import compat
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import inc_agg
 from repro.core.inc_agg import IncAggConfig
+from repro.core.netfilter import NetFilter
+from repro.core.rpc import Field, IncFuture, Service
+from repro.core.runtime import DrainPolicy, IncRuntime
 from repro.models import api
 from repro.optim import adamw
 from repro.sharding import rules
 
 SEQ_SHARDED_BLOCKS = ("global", "moe", "selfcross")
+
+# ---------------------------------------------------------------------------
+# INC telemetry: the loop's metric + agreement channels on the async runtime
+# ---------------------------------------------------------------------------
+
+# fixed-point digits for metric scalars; milli-precision keeps long-run
+# accumulated sums far from the int32 saturation sentinels of the register
+# path (scaled values must stay << 2**31)
+METRIC_PRECISION = 3
+
+
+def telemetry_service(app: str) -> Service:
+    """The loop's metric stream as an AsyncAgtr app: per-step scalars ride
+    Map.addTo (summed in-network), monitors read them back with Map.get."""
+    svc = Service("Telemetry")
+    svc.rpc("PushMetrics", [Field("kvs", "STRINTMap")], [Field("msg")],
+            NetFilter.from_dict({"AppName": app,
+                                 "Precision": METRIC_PRECISION,
+                                 "addTo": "MetricPush.kvs"}))
+    svc.rpc("ReadMetrics", [Field("kvs", "STRINTMap")],
+            [Field("kvs", "STRINTMap")],
+            NetFilter.from_dict({"AppName": app,
+                                 "Precision": METRIC_PRECISION,
+                                 "get": "MetricReply.kvs"}))
+    return svc
+
+
+def agreement_service(threshold: int, app: str) -> Service:
+    """Step-commit quorum as an Agreement app: the threshold-th worker vote
+    for a step key forwards exactly one commit notification (CntFwd)."""
+    svc = Service("StepAgreement")
+    svc.rpc("CommitStep", [Field("kvs", "STRINTMap")], [Field("msg")],
+            NetFilter.from_dict({
+                "AppName": app,
+                "CntFwd": {"to": "ALL", "threshold": threshold,
+                           "key": "CommitVote.kvs"}}))
+    return svc
+
+
+class TrainTelemetry:
+    """Metric + agreement channels for the train/serve loops, batched.
+
+    The hot path calls push()/vote(), which enqueue on the async runtime
+    and return immediately: the scheduler coalesces many steps' worth of
+    metric pushes into one drained pipeline batch (no N=1 INC call ever
+    runs on the step path). ReadMetrics is a synchronous call, so it
+    drains queued pushes first — reads are always consistent with every
+    push issued before them.
+    """
+
+    def __init__(self, runtime: IncRuntime | None = None, *,
+                 n_workers: int = 1, quorum: float = 1.0,
+                 app_prefix: str = "train"):
+        # telemetry is latency-insensitive: a generous time trigger lets
+        # many steps' pushes coalesce into each drained batch (reads still
+        # see everything — the inline ReadMetrics call flushes first)
+        self.rt = runtime or IncRuntime(policy=DrainPolicy(
+            max_batch=64, max_delay=0.25, eager_window=False))
+        self._own_rt = runtime is None
+        self.threshold = max(1, int(round(quorum * n_workers)))
+        self.rt.server.register("CommitStep", self._on_commit)
+        self.metrics = self.rt.make_stub(
+            telemetry_service(f"{app_prefix}-metrics"))
+        self.agree = self.rt.make_stub(
+            agreement_service(self.threshold, f"{app_prefix}-agree"))
+        self._names: set[str] = set()
+        # O(1) vote accounting: CntFwd invokes the CommitStep handler
+        # exactly once per quorum, inside the (plane-serialized) pipeline
+        # pass — so counting there needs no retained futures. Only the
+        # most recent vote future is kept: per-channel resolution is FIFO,
+        # so once it resolves, every earlier vote's pipeline pass (and its
+        # handler-side count) has completed.
+        self._commits = 0
+        self._last_vote: IncFuture | None = None
+
+    def _on_commit(self, req: dict) -> dict:
+        self._commits += 1
+        return {"msg": "commit"}
+
+    def push(self, scalars: dict[str, float]) -> IncFuture:
+        """Accumulate metric scalars in-network; returns the push future."""
+        self._names.update(scalars)
+        kvs = {k: float(v) for k, v in scalars.items()}
+        return self.metrics.call_async("PushMetrics", {"kvs": kvs})
+
+    def vote(self, step: int) -> IncFuture:
+        """Cast this worker's commit vote for ``step``; the future's reply
+        is non-empty iff this vote completed the quorum."""
+        f = self.agree.call_async("CommitStep", {"kvs": {f"step-{step}": 1}})
+        self._last_vote = f
+        return f
+
+    def read(self, names=None) -> dict[str, float]:
+        """Read accumulated metrics (drains queued pushes first)."""
+        keys = {k: 0 for k in (names or sorted(self._names))}
+        if not keys:
+            return {}
+        out = self.metrics.call("ReadMetrics", {"kvs": keys})
+        return {k: float(v) for k, v in out.get("kvs", {}).items()}
+
+    def commits(self) -> int:
+        """Quorum notifications among the votes cast so far (waits for the
+        last vote, which implies every earlier one resolved)."""
+        if self._last_vote is not None:
+            self._last_vote.exception()     # block until resolved
+        return self._commits
+
+    def finish(self) -> dict:
+        """Flush, summarize, and (if owned) stop the runtime."""
+        summary = {"metrics": self.read(),
+                   "commits": self.commits(),
+                   "scheduling": self.rt.scheduling_report()}
+        if self._own_rt:
+            self.rt.close()
+        return summary
 
 
 # ---------------------------------------------------------------------------

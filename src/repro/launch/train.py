@@ -32,7 +32,7 @@ def train_loop(*, arch: str, inc_mode: str, steps_n: int, seq: int,
                ckpt_dir: str | None = None, ckpt_every: int = 50,
                resume: bool = True, model_axis: int = 2,
                data_kind: str = "bigram", log_every: int = 10,
-               n_micro: int = 1) -> dict:
+               n_micro: int = 1, quorum: float = 1.0) -> dict:
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -60,7 +60,13 @@ def train_loop(*, arch: str, inc_mode: str, steps_n: int, seq: int,
 
     dcfg = pipeline.DataConfig(vocab=cfg.vocab, batch=batch, seq_len=seq,
                                kind=data_kind)
+    # metric + agreement channels on the async INC runtime: per-step pushes
+    # and commit votes enqueue and return; the scheduler coalesces them
+    # into drained batches off the hot path (no N=1 INC call per step)
+    telemetry = steps.TrainTelemetry(n_workers=prog.meta["n_dp"],
+                                     quorum=quorum, app_prefix="train")
     losses = []
+    ran = 0
     t0 = time.time()
     for s in range(start, steps_n):
         if store and store.already_applied(s):
@@ -69,6 +75,13 @@ def train_loop(*, arch: str, inc_mode: str, steps_n: int, seq: int,
         b = pipeline.add_modality_stubs(b, cfg, batch)
         params, opt, m = prog.fn(params, opt, b, jnp.int32(s))
         losses.append(float(m["loss"]))
+        ran += 1
+        telemetry.push({"loss_sum": losses[-1], "steps": 1,
+                        "gnorm_sum": float(m["gnorm"])})
+        # one commit vote per dp rank; CntFwd forwards exactly one quorum
+        # notification per step once >= quorum * n_dp votes landed
+        for _ in range(prog.meta["n_dp"]):
+            telemetry.vote(s)
         if s % log_every == 0 or s == steps_n - 1:
             dt = time.time() - t0
             print(f"step {s:5d} loss {losses[-1]:.4f} "
@@ -79,7 +92,15 @@ def train_loop(*, arch: str, inc_mode: str, steps_n: int, seq: int,
     if store:
         store.save(steps_n - 1, {"params": params, "opt": opt})
         store.wait()
+    inc = telemetry.finish()
+    if ran:
+        sched = inc["scheduling"].get("train-metrics", {})
+        print(f"inc telemetry: steps={inc['metrics'].get('steps', 0):.0f} "
+              f"mean_loss={inc['metrics'].get('loss_sum', 0.0) / ran:.4f} "
+              f"commits={inc['commits']}/{ran} "
+              f"mean_drained_batch={sched.get('mean_drained_batch', 0)}")
     return {"losses": losses, "params": params, "opt": opt,
+            "inc_telemetry": inc,
             "entropy_floor": (pipeline.bigram_entropy(dcfg)
                               if data_kind == "bigram" else None)}
 
@@ -96,12 +117,13 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--data", default="bigram")
     ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--quorum", type=float, default=1.0)
     args = ap.parse_args()
     out = train_loop(arch=args.arch, inc_mode=args.inc_mode,
                      steps_n=args.steps, seq=args.seq, batch=args.batch,
                      reduced=args.reduced, precision=args.precision,
                      ckpt_dir=args.ckpt_dir, data_kind=args.data,
-                     n_micro=args.n_micro)
+                     n_micro=args.n_micro, quorum=args.quorum)
     ls = out["losses"]
     print(f"final loss {ls[-1]:.4f} (first {ls[0]:.4f}); "
           f"entropy floor {out['entropy_floor']}")

@@ -3,8 +3,11 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.core.clear_policy import make_clear_policy
 from repro.core.quantize import quantize
+from repro.kernels import ops
+from repro.kernels.constants import INT32_MAX, INT32_MIN, SAT_MAX
 
 
 @pytest.mark.parametrize("policy", ["copy", "shadow", "lazy"])
@@ -34,6 +37,49 @@ def test_lazy_overflow_triggers_fallback_reset():
     out = pol.read_and_clear()
     assert pol.stats.fallback_resets == 1
     assert np.all(np.asarray(pol.acc) == 0)    # switch memory reset
+
+
+# ---- batched reply-path fold (one pass per drained batch) -------------------
+
+@pytest.mark.parametrize("policy", ["copy", "shadow", "lazy"])
+def test_addto_batch_equals_sequential_addto(policy):
+    """addto_batch(qs) must equal the per-call addto loop — including when
+    intermediate sums saturate to sticky sentinels mid-batch."""
+    rng = np.random.RandomState(7)
+    batches = [
+        [rng.randint(-1000, 1000, 16).astype(np.int32) for _ in range(5)],
+        # saturating: two half-range updates overflow on the second one
+        [np.full(16, SAT_MAX // 2 + 1, np.int32)] * 3,
+        # sentinel inputs stay sticky through the fold
+        [np.array([INT32_MAX, INT32_MIN, 5, -5] * 4, np.int32),
+         rng.randint(-10, 10, 16).astype(np.int32)],
+    ]
+    for qs in batches:
+        seq = make_clear_policy(policy, 16)
+        bat = make_clear_policy(policy, 16)
+        for q in qs:
+            seq.addto(jnp.asarray(q))
+        bat.addto_batch([jnp.asarray(q) for q in qs])
+        np.testing.assert_array_equal(np.asarray(seq.read_and_clear()),
+                                      np.asarray(bat.read_and_clear()))
+
+
+@settings(max_examples=25)
+@given(st.lists(st.lists(st.integers(INT32_MIN, INT32_MAX),
+                         min_size=4, max_size=4),
+                min_size=1, max_size=6))
+def test_sat_add_batch_property(rows):
+    """ops.sat_add_batch == the sequential sat_add fold, elementwise exact,
+    over arbitrary values including the reserved sentinels."""
+    acc = jnp.zeros(4, jnp.int32)
+    qs = [jnp.asarray(np.array(r, np.int64).astype(np.int64)
+                      .clip(INT32_MIN, INT32_MAX).astype(np.int32))
+          for r in rows]
+    want = acc
+    for q in qs:
+        want = ops.sat_add(want, q)
+    got = ops.sat_add_batch(acc, jnp.stack(qs))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 
 def test_lazy_monotone_between_clears():
