@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench-batch bench-async
+.PHONY: test test-fast examples bench-batch bench-async
 
 # full tier-1 suite (includes the slow multidevice subprocess tests)
 test:
@@ -10,6 +10,13 @@ test:
 # fast lane: non-slow suite + delta vs the seed baseline
 test-fast:
 	bash scripts/ci.sh
+
+# the four typed-schema INC example apps (each self-asserts its results)
+examples:
+	python -m examples.quickstart
+	python -m examples.mapreduce
+	python -m examples.monitoring
+	python -m examples.paxos
 
 # batched RPC data-plane sweep (calls/sec vs batch size)
 bench-batch:

@@ -6,9 +6,10 @@ the derived column also reports modeled wire bytes, the
 hardware-independent quantity the roofline consumes). Voting and Monitor
 delays come from the host-level CntFwd / INC-map paths.
 
-``--batch`` runs the batched-RPC sweep instead: calls/sec of the
-Stub.call_batch data plane vs batch size (one sparse_addto kernel batch
-per flush instead of one device round trip per call):
+``--batch`` runs the batched-RPC sweep instead: calls/sec of the bulk
+data plane (typed-stub ``Push.batch``, inline call_batch_async) vs batch
+size (one sparse_addto kernel batch per flush instead of one device round
+trip per call):
 
     PYTHONPATH=src python -m benchmarks.agg_goodput --batch
 """
@@ -29,13 +30,12 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from benchmarks._util import host_mesh, timeit
+import repro.api as inc
 from repro.core import inc_agg
 from repro import compat
 from repro.core.agreement import CntFwd
 from repro.core.inc_agg import IncAggConfig
 from repro.core.inc_map import ServerAgent, SwitchMemory
-from repro.core.netfilter import NetFilter
-from repro.core.rpc import Field, NetRPC, Service
 
 L = 1 << 20      # 1M fp32 elements per rank
 
@@ -105,18 +105,15 @@ def run():
 KEYS_PER_CALL = 16
 
 
-def _batch_service() -> Service:
-    """Monitoring-style RPC with a vote counter: exercises the full request
-    pipeline the batch plane vectorizes — Map.addTo for the kvs stream plus
-    a CntFwd counter per call (ballot = the hottest flow key)."""
-    svc = Service("BatchBench")
-    svc.rpc("Push", [Field("kvs", "STRINTMap")], [Field("msg")],
-            NetFilter.from_dict({"AppName": "BB-1",
-                                 "addTo": "PushRequest.kvs",
-                                 "CntFwd": {"to": "SRC",
-                                            "threshold": 1 << 30,
-                                            "key": "PushRequest.kvs"}}))
-    return svc
+# Monitoring-style RPC with a vote counter: exercises the full request
+# pipeline the batch plane vectorizes — Map.addTo for the kvs stream plus
+# a CntFwd counter per call (ballot = the hottest flow key).
+@inc.service(app="BB-1")
+class BatchBench:
+    @inc.rpc(request_msg="PushRequest",
+             cnt_fwd=inc.CntFwd(to="SRC", threshold=1 << 30,
+                                key="PushRequest.kvs"))
+    def Push(self, kvs: inc.Agg[inc.STRINTMap]) -> {"msg": inc.Plain}: ...
 
 
 def _batch_requests(n_calls: int, seed: int = 0) -> list[dict]:
@@ -143,19 +140,20 @@ def run_batch(batch_sizes=(1, 4, 16, 64), n_calls: int = 256,
     for bs in batch_sizes:
         times = []
         for rep in range(repeats):
-            svc = _batch_service()
-            rt = NetRPC()
-            stub = rt.make_stub(svc, n_slots=8192)
+            rt = inc.NetRPC()
+            stub = rt.make_stub(BatchBench, n_slots=8192)
             reqs = _batch_requests(n_calls)
             # warm the jit caches (sparse_addto buckets) for this chunk size
             for chunk in _chunks(_batch_requests(4 * bs, seed=1), bs):
-                stub.call_batch("Push", chunk)
+                stub.Push.batch(chunk)
             gc.collect()
             gc.disable()
             try:
                 t0 = time.perf_counter()
                 for chunk in _chunks(reqs, bs):
-                    stub.call_batch("Push", chunk)
+                    # inline bulk submission: one pipeline pass per chunk,
+                    # futures come back already resolved
+                    stub.Push.batch(chunk)
                 times.append(time.perf_counter() - t0)
             finally:
                 gc.enable()

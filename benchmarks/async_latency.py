@@ -3,7 +3,9 @@
 The question PR 2's runtime must answer: does auto-drain (the scheduler
 picking batch boundaries) keep the explicit-``drain()`` goodput of PR 1
 while bounding tail latency for open-loop callers? Two sweeps over the
-same monitoring-style Push stream:
+same monitoring-style Push stream (declared once as a typed schema
+service; every async mode calls the generated stub's futures-first
+``stub.Push(kvs=...)``):
 
   thr   open-loop: submit as fast as admission allows; calls/sec.
   lat   paced arrivals at ``LOAD_FRACTION`` of the measured explicit-drain
@@ -12,13 +14,18 @@ same monitoring-style Push stream:
 
 Modes:
 
-  seq       Stub.call per request — the batch=1 pipeline baseline.
+  seq       one resolved future per call on a plain NetRPC — the batch=1
+            inline pipeline baseline.
   explicit  NetRPC.submit + an explicit drain() every CHUNK calls (PR 1's
-            caller-scheduled front).
+            caller-scheduled front, via the legacy compat shim).
   size      IncRuntime, size trigger only  (max_batch=CHUNK).
   time      IncRuntime, time trigger only  (max_delay=1ms).
   window    IncRuntime defaults: eager AIMD window trigger + size/time
             backstops (backpressure-coupled adaptive batching).
+  abatch    bulk submission: ONE ``stub.Push.batch(reqs)`` call
+            (IncRuntime.call_batch_async) queues the whole stream; the
+            size trigger carves it into pipeline batches and admission
+            backpressure throttles the submitter mid-list (thr only).
 
 Acceptance (checked by the summary row): size or time auto-drain reaches
 >= 80% of explicit-drain throughput, and its paced p99 stays below the
@@ -39,21 +46,18 @@ import time
 
 import numpy as np
 
-from repro.core.netfilter import NetFilter
-from repro.core.rpc import Field, NetRPC, Service
-from repro.core.runtime import DrainPolicy, IncRuntime
+import repro.api as inc
+from repro.api import DrainPolicy, IncRuntime, NetRPC
 
 KEYS_PER_CALL = 16
 CHUNK = 64                 # explicit-drain batch / size trigger
 LOAD_FRACTION = 0.8        # paced offered load vs explicit capacity
 
 
-def _service() -> Service:
-    svc = Service("AsyncBench")
-    svc.rpc("Push", [Field("kvs", "STRINTMap")], [Field("msg")],
-            NetFilter.from_dict({"AppName": "AB-1",
-                                 "addTo": "PushRequest.kvs"}))
-    return svc
+@inc.service(app="AB-1")
+class AsyncBench:
+    @inc.rpc(request_msg="PushRequest")
+    def Push(self, kvs: inc.Agg[inc.STRINTMap]) -> {"msg": inc.Plain}: ...
 
 
 def _requests(n_calls: int, seed: int = 0) -> list[dict]:
@@ -64,7 +68,7 @@ def _requests(n_calls: int, seed: int = 0) -> list[dict]:
 
 
 def _policy(mode: str) -> DrainPolicy:
-    if mode == "size":
+    if mode in ("size", "abatch"):
         return DrainPolicy(max_batch=CHUNK, max_delay=5.0,
                            eager_window=False)
     if mode == "time":
@@ -78,7 +82,7 @@ def _fresh(mode: str):
         rt = NetRPC()
     else:
         rt = IncRuntime(policy=_policy(mode))
-    return rt, rt.make_stub(_service(), n_slots=8192)
+    return rt, rt.make_stub(AsyncBench, n_slots=8192)
 
 
 def _close(rt) -> None:
@@ -92,13 +96,11 @@ def _warm(mode: str, rt, stub, req: dict) -> None:
     """One out-of-band call before the clock starts: spawns the scheduler
     thread (async modes) and touches every jit/kernel path, symmetrically
     across modes."""
-    if mode == "seq":
-        stub.call("Push", req)
-    elif mode == "explicit":
-        rt.submit(stub, "Push", req)
+    if mode == "explicit":
+        rt.submit(stub.legacy, "Push", req)
         rt.drain()
     else:
-        stub.call_async("Push", req).result()
+        stub.Push(**req).result()
 
 
 def _thr_once(mode: str, reqs: list[dict]) -> tuple[float, float]:
@@ -111,15 +113,18 @@ def _thr_once(mode: str, reqs: list[dict]) -> tuple[float, float]:
         t0 = time.perf_counter()
         if mode == "seq":
             for r in reqs:
-                stub.call("Push", r)
+                stub.Push(**r).result()
         elif mode == "explicit":
             for i, r in enumerate(reqs):
-                rt.submit(stub, "Push", r)
+                rt.submit(stub.legacy, "Push", r)
                 if (i + 1) % CHUNK == 0:
                     rt.drain()
             rt.drain()
+        elif mode == "abatch":
+            for f in stub.Push.batch(reqs):
+                f.result()
         else:
-            futs = [stub.call_async("Push", r) for r in reqs]
+            futs = [stub.Push(**r) for r in reqs]
             for f in futs:
                 f.result()
         dt = time.perf_counter() - t0
@@ -169,10 +174,10 @@ def _lat(mode: str, reqs: list[dict], rate: float) -> np.ndarray:
             if delay > 0:
                 time.sleep(delay)
             if mode == "seq":
-                stub.call("Push", r)
+                stub.Push(**r).result()
                 lat[i] = time.perf_counter() - target
             elif mode == "explicit":
-                rt.submit(stub, "Push", r)
+                rt.submit(stub.legacy, "Push", r)
                 pending.append((i, target))
                 if len(pending) >= CHUNK:
                     rt.drain()
@@ -181,7 +186,7 @@ def _lat(mode: str, reqs: list[dict], rate: float) -> np.ndarray:
                         lat[j] = done - arr
                     pending = []
             else:
-                fut = stub.call_async("Push", r)
+                fut = stub.Push(**r)
                 fut.add_done_callback(
                     lambda f, j=i, arr=target:
                     lat.__setitem__(j, time.perf_counter() - arr))
@@ -191,7 +196,7 @@ def _lat(mode: str, reqs: list[dict], rate: float) -> np.ndarray:
             done = time.perf_counter()
             for j, arr in pending:
                 lat[j] = done - arr
-        elif mode not in ("seq", "explicit"):
+        elif mode != "explicit":
             for f in pending:
                 f.result()
     finally:
@@ -206,7 +211,7 @@ def run(n_calls: int = 2048, repeats: int = 5) -> list:
     # warm the kernel/jit caches once so no mode pays first-call costs
     _thr_once("explicit", reqs[:4 * CHUNK])
 
-    modes = ("seq", "explicit", "size", "time", "window")
+    modes = ("seq", "explicit", "size", "time", "window", "abatch")
     thr, samples = _thr(modes, reqs, repeats)
     cps = {m: thr[m][0] for m in modes}
     for mode in modes:
@@ -234,14 +239,15 @@ def run(n_calls: int = 2048, repeats: int = 5) -> list:
     # the gate on this jittery container.
     ratio = {m: float(np.median([e / a for e, a in
                                  zip(samples["explicit"], samples[m])]))
-             for m in ("size", "time")}
+             for m in ("size", "time", "abatch")}
     passing = [m for m in ("size", "time")
                if ratio[m] >= 0.8 and p99[m] < p99["seq"]]
     best = max(("size", "time"), key=lambda m: ratio[m])
     rows.append(("t_async/acceptance", 0,
                  f"modes_meeting_both={passing or 'none'}"
                  f" ({'PASS' if passing else 'FAIL'})"
-                 f" median_auto_vs_explicit={best}:{ratio[best]:.2f}"))
+                 f" median_auto_vs_explicit={best}:{ratio[best]:.2f}"
+                 f" batch_async_vs_explicit={ratio['abatch']:.2f}"))
     return rows
 
 

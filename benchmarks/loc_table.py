@@ -39,13 +39,24 @@ def count_loc(path: Path) -> int:
     return n
 
 
+_SCHEMA_RE = re.compile(
+    r"@?inc\.(service|rpc|Agg|Get|ReadMostly|CntFwd|DrainPolicy|Plain|"
+    r"FPArray|IntArray|STRINTMap|Integer)\b")
+
+
 def count_netfilter_loc(path: Path) -> int:
-    """NetFilter config lines inside an example (the 'switch code')."""
+    """INC declaration lines inside an example (the 'switch code'): lines
+    of the typed schema vocabulary (@inc.service/@inc.rpc decorators and
+    Agg/Get/ReadMostly/CntFwd annotations), which compile into the
+    NetFilter the legacy JSON blob used to spell out; legacy
+    NetFilter.from_dict blocks still count for unported files."""
     if not path.exists():
         return 0
     txt = path.read_text()
     m = re.findall(r"NetFilter\.from_dict\((\{.*?\})\)", txt, re.S)
-    return sum(t.count("\n") + 1 for t in m)
+    legacy = sum(t.count("\n") + 1 for t in m)
+    typed = sum(1 for ln in txt.splitlines() if _SCHEMA_RE.search(ln))
+    return legacy + typed
 
 
 def run():

@@ -11,10 +11,10 @@ import time
 
 import numpy as np
 
+import repro.api as inc
 from repro.core.agreement import CntFwd
 from repro.core.channel import Controller
 from repro.core.netfilter import NetFilter
-from repro.core.rpc import Field, NetRPC, Service
 
 
 def mk_apps(controller, n_per_type, tag):
@@ -74,14 +74,18 @@ def drive(apps, n_rounds=40):
             np.mean(lat_ag) * 1e6 if lat_ag else 0.0)
 
 
-def mk_services(n_apps: int) -> list[Service]:
+def mk_services(n_apps: int) -> list:
+    """One typed schema class per co-resident app (distinct AppName -> its
+    own channel); the class body is re-evaluated per app, so the schema
+    layer parameterizes cleanly."""
     svcs = []
     for i in range(n_apps):
-        svc = Service(f"Mon{i}")
-        svc.rpc("Push", [Field("kvs", "STRINTMap")], [Field("msg")],
-                NetFilter.from_dict({"AppName": f"coal-{i}",
-                                     "addTo": "R.kvs"}))
-        svcs.append(svc)
+        @inc.service(app=f"coal-{i}", name=f"Mon{i}")
+        class Mon:
+            @inc.rpc(request_msg="R")
+            def Push(self, kvs: inc.Agg[inc.STRINTMap]
+                     ) -> {"msg": inc.Plain}: ...
+        svcs.append(Mon)
     return svcs
 
 
@@ -97,7 +101,7 @@ def run_coalesced(n_apps: int = 4, n_clients: int = 4, n_rounds: int = 64
             for _ in range(n_rounds)]
 
     def setup():
-        rt = NetRPC()
+        rt = inc.NetRPC()
         stubs = [[rt.make_stub(svc, n_slots=1024) for _ in range(n_clients)]
                  for svc in mk_services(n_apps)]
         return rt, stubs
@@ -107,7 +111,7 @@ def run_coalesced(n_apps: int = 4, n_clients: int = 4, n_rounds: int = 64
     for rnd in reqs:
         for a, app_reqs in enumerate(rnd):
             for c, r in enumerate(app_reqs):
-                stubs[a][c].call("Push", r)
+                stubs[a][c].Push(**r).result()
     t_seq = time.perf_counter() - t0
 
     rt, stubs = setup()
@@ -115,7 +119,7 @@ def run_coalesced(n_apps: int = 4, n_clients: int = 4, n_rounds: int = 64
     for rnd in reqs:
         for a, app_reqs in enumerate(rnd):
             for c, r in enumerate(app_reqs):
-                rt.submit(stubs[a][c], "Push", r)
+                rt.submit(stubs[a][c].legacy, "Push", r)
         rt.drain()
     t_coal = time.perf_counter() - t0
     ch = stubs[0][0].channels["Push"]

@@ -10,28 +10,32 @@ import time
 
 import numpy as np
 
-from repro.core.netfilter import NetFilter
-from repro.core.rpc import Field, NetRPC, Service
+import repro.api as inc
 
 N_PROPOSALS = 150
 MAJORITY = 2
 N_ACCEPTORS = 3
 
 
-def _service(inc: bool) -> Service:
-    svc = Service("Paxos")
-    cnt = ({"to": "ALL", "threshold": MAJORITY, "key": "kvs"} if inc
-           else {"to": "SRC", "threshold": 0, "key": "NULL"})
-    svc.rpc("Accept", [Field("kvs", "STRINTMap")], [Field("msg")],
-            NetFilter.from_dict({"AppName": f"paxos-{inc}", "CntFwd": cnt}))
-    return svc
+def _service(use_inc: bool):
+    """Typed schema per variant: with INC, CntFwd counts the accepts in-
+    network; without, threshold=0 disables the gate and every accept
+    travels to the learner (the libpaxos analogue)."""
+    cnt = (inc.CntFwd(to="ALL", threshold=MAJORITY, key="kvs") if use_inc
+           else inc.CntFwd(to="SRC", threshold=0))
+
+    @inc.service(app=f"paxos-{use_inc}", name="Paxos")
+    class Paxos:
+        @inc.rpc(cnt_fwd=cnt)
+        def Accept(self, kvs: inc.STRINTMap) -> {"msg": inc.Plain}: ...
+    return Paxos
 
 
-def _drive(inc: bool):
-    svc = _service(inc)
-    rt = NetRPC()
+def _drive(use_inc: bool):
+    svc = _service(use_inc)
+    rt = inc.NetRPC()
     learned = []
-    if inc:
+    if use_inc:
         rt.server.register("Accept",
                            lambda req: learned.append(1) or {"msg": "ok"})
     else:
@@ -52,7 +56,7 @@ def _drive(inc: bool):
     for b in range(N_PROPOSALS):
         t1 = time.perf_counter()
         for a in acceptors:
-            a.call("Accept", {"kvs": {f"b{b}": 1}})
+            a.Accept(kvs={f"b{b}": 1}).result()
         lats.append(time.perf_counter() - t1)
     dt = time.time() - t0
     return N_PROPOSALS / dt, np.percentile(lats, 99) * 1e6, \
@@ -61,8 +65,8 @@ def _drive(inc: bool):
 
 def run():
     rows = []
-    thr_inc, p99_inc, seen_inc = _drive(inc=True)
-    thr_sw, p99_sw, seen_sw = _drive(inc=False)
+    thr_inc, p99_inc, seen_inc = _drive(use_inc=True)
+    thr_sw, p99_sw, seen_sw = _drive(use_inc=False)
     rows.append(("f7/inc/throughput_per_s", round(1e6 / thr_inc, 1),
                  round(thr_inc, 1)))
     rows.append(("f7/inc/p99_us", round(p99_inc, 1),

@@ -5,12 +5,16 @@ running reduction in the INC map (switch registers + host spill); Query
 reads the aggregate with Map.get. The AsyncAgtr type: arbitrary keys,
 results readable at any time.
 
+The typed schema says it all: ``ReduceByKey`` declares its kvs field as
+an ``Agg`` stream (the in-network reduce), ``Query`` is ``ReadMostly``.
+On a plain ``NetRPC`` the futures resolve inline — same API, no
+scheduler — so ``.result()`` right after the call is the sync path.
+
     PYTHONPATH=src python -m examples.mapreduce
 """
 from collections import Counter
 
-from repro.core.netfilter import NetFilter
-from repro.core.rpc import Field, NetRPC, Service
+import repro.api as inc
 
 CORPUS = [
     "the quick brown fox jumps over the lazy dog",
@@ -20,31 +24,29 @@ CORPUS = [
 ]
 
 
-def build_service() -> Service:
-    svc = Service("MapReduce")
-    svc.rpc("ReduceByKey", [Field("kvs", "STRINTMap")], [Field("msg")],
-            NetFilter.from_dict({"AppName": "MR-1", "Precision": 0,
-                                 "addTo": "ReduceRequest.kvs"}))
-    svc.rpc("Query", [Field("msg")], [Field("kvs", "STRINTMap")],
-            NetFilter.from_dict({"AppName": "MR-1", "Precision": 0,
-                                 "get": "QueryReply.kvs"}))
-    return svc
+@inc.service(app="MR-1")
+class MapReduce:
+    @inc.rpc(request_msg="ReduceRequest")
+    def ReduceByKey(self, kvs: inc.Agg[inc.STRINTMap]
+                    ) -> {"msg": inc.Plain}: ...
+
+    @inc.rpc(reply_msg="QueryReply")
+    def Query(self, kvs: inc.ReadMostly[inc.STRINTMap]): ...
 
 
 def main():
-    svc = build_service()
-    rt = NetRPC()
-    mappers = [rt.make_stub(svc) for _ in range(2)]
+    rt = inc.NetRPC()
+    mappers = [rt.make_stub(MapReduce) for _ in range(2)]
 
     # map phase: each mapper reduces its shard locally, pushes partials
     for i, m in enumerate(mappers):
         shard = CORPUS[i::2]
         local = Counter(w for line in shard for w in line.split())
-        m.call("ReduceByKey", {"kvs": dict(local)})
+        m.ReduceByKey(kvs=dict(local)).result()
 
     # query: read the global reduction out of the network
     truth = Counter(w for line in CORPUS for w in line.split())
-    reply = mappers[0].call("Query", {"kvs": {w: 0 for w in truth}})
+    reply = mappers[0].Query(kvs={w: 0 for w in truth}).result()
     got = {k: int(v) for k, v in reply["kvs"].items()}
     top = sorted(got.items(), key=lambda kv: -kv[1])[:5]
     print("top words:", top)

@@ -5,44 +5,42 @@ ElasticSketch analogue); a monitor process queries hot flows at any time.
 The cache-replacement policy keeps hot flows on the 'switch' and spills
 the long tail to the server agent.
 
-Probes are issued through the async front: each ``call_async`` returns an
-IncFuture immediately and the runtime's size trigger (16) coalesces probes
-into one INC-map kernel batch per drain — application code never schedules
-(or drains) anything. The Query is a plain synchronous call: the runtime
-drains queued probes first, so the read observes every probe issued
-before it.
+The typed schema declares the whole app: ``MonitorCall`` streams a
+``STRINTMap`` through Map.addTo (plus a pass-through payload the server
+handler sees), ``Query`` is a ``ReadMostly`` RPC — the request carries
+the keys, their aggregated counts come back via Map.get.  The service's
+``drain=`` option sets the channel's schedule: every 16 queued probes
+become one INC-map kernel batch; application code never schedules (or
+drains) anything.  The Query future is issued on the same channel, so
+FIFO order guarantees it observes every probe issued before it.
 
     PYTHONPATH=src python -m examples.monitoring
 """
 import numpy as np
 
-from repro.core.netfilter import NetFilter
-from repro.core.rpc import Field, Service
-from repro.core.runtime import DrainPolicy, IncRuntime
+import repro.api as inc
 
 
-def build_service() -> Service:
-    svc = Service("Monitor")
-    svc.rpc("MonitorCall", [Field("kvs", "STRINTMap"), Field("payload")],
-            [Field("payload")],
-            NetFilter.from_dict({"AppName": "MON-1", "Precision": 0,
-                                 "addTo": "MonitorRequest.kvs"}))
-    svc.rpc("Query", [Field("message")], [Field("kvs", "STRINTMap")],
-            NetFilter.from_dict({"AppName": "MON-1", "Precision": 0,
-                                 "get": "QueryReply.kvs"}))
-    return svc
+@inc.service(app="MON-1",
+             drain=inc.DrainPolicy(max_batch=16, max_delay=0.05,
+                                   eager_window=False))
+class Monitor:
+    @inc.rpc(request_msg="MonitorRequest")
+    def MonitorCall(self, kvs: inc.Agg[inc.STRINTMap],
+                    payload: inc.Plain) -> {"payload": inc.Plain}: ...
+
+    @inc.rpc(reply_msg="QueryReply")
+    def Query(self, kvs: inc.ReadMostly[inc.STRINTMap]): ...
 
 
 def main():
-    svc = build_service()
-    rt = IncRuntime(policy=DrainPolicy(max_batch=16, max_delay=0.05,
-                                       eager_window=False))
+    rt = inc.IncRuntime()
     rt.server.register("MonitorCall", lambda req: {"payload": "ack"})
-    probe = rt.make_stub(svc, n_slots=512)
+    probe = rt.make_stub(Monitor, n_slots=512)
 
     # synthetic zipf traffic: a few elephant flows, many mice. Probes go
-    # through the futures front; the size trigger turns every 16 of them
-    # into one INC-map kernel batch.
+    # through the futures front; the schema's size trigger turns every 16
+    # of them into one INC-map kernel batch.
     rng = np.random.RandomState(0)
     truth = {}
     futures = []
@@ -53,12 +51,11 @@ def main():
             key = f"flow-{f}"
             kvs[key] = kvs.get(key, 0) + 1
             truth[key] = truth.get(key, 0) + 1
-        futures.append(probe.call_async(
-            "MonitorCall", {"kvs": kvs, "payload": "probe"}))
+        futures.append(probe.MonitorCall(kvs=kvs, payload="probe"))
 
-    # the monitor reads at any time; the inline Query drains queued probes
-    # first, so it observes all 200 probes
-    reply = probe.call("Query", {"kvs": {k: 0 for k in truth}})
+    # the monitor reads at any time; the Query rides the same channel
+    # queue, so it drains behind all 200 probes (.result() demand-flushes)
+    reply = probe.Query(kvs={k: 0 for k in truth}).result()
     assert all(f.result()["payload"] == "ack" for f in futures)
     got = {k: int(v) for k, v in reply["kvs"].items()}
     assert got == truth
@@ -68,7 +65,7 @@ def main():
     print("hot flows:", hot)
     print(f"flows tracked: {len(truth)}; switch slots: {srv.capacity}; "
           f"cache hit ratio: {srv.cache_hit_ratio:.3f}")
-    print(f"auto-drain: {sched['drained_calls']} probes in "
+    print(f"auto-drain: {sched['drained_calls']} calls in "
           f"{sched['drained_batches']} batches (triggers {sched['drains']}), "
           f"mean batch {sched['mean_drained_batch']}")
     print("== every counter exact (switch + host-spill fallback)")

@@ -5,6 +5,12 @@ acceptors' Phase-2 accepts are counted by CntFwd, and learners are notified
 only when a ballot reaches its majority — the server (learners) never see
 sub-majority traffic (the sub-RTT latency optimization).
 
+One typed service spans two channels: each RPC pins its own ``app=``, so
+Phase 1 (test&set leader election = CntFwd threshold 1) and Phase 2
+(majority counting) get separate switch partitions.  The ``kvs`` field is
+a bare ``STRINTMap`` IEDT — it rides the INC channel (the ballot id tags
+the vote counter) and never reaches the learner handler.
+
     PYTHONPATH=src python -m examples.paxos [--proposals 50]
 """
 import argparse
@@ -12,28 +18,24 @@ import time
 
 import numpy as np
 
-from repro.core.netfilter import NetFilter
-from repro.core.rpc import Field, NetRPC, Service
+import repro.api as inc
 
 N_ACCEPTORS = 3
 MAJORITY = 2
 
 
-def build_service() -> Service:
-    svc = Service("Paxos")
+@inc.service(name="Paxos")
+class Paxos:
     # Phase 1 (prepare/promise): test&set on the ballot number -> the
     # in-network leader election (threshold=1 CntFwd = test&set).
-    svc.rpc("Prepare", [Field("kvs", "STRINTMap")], [Field("msg")],
-            NetFilter.from_dict({
-                "AppName": "paxos-prepare",
-                "CntFwd": {"to": "SRC", "threshold": 1, "key": "kvs"}}))
+    @inc.rpc(app="paxos-prepare",
+             cnt_fwd=inc.CntFwd(to="SRC", threshold=1, key="kvs"))
+    def Prepare(self, kvs: inc.STRINTMap) -> {"msg": inc.Plain}: ...
+
     # Phase 2 (accept): count accepts; forward to learners at majority.
-    svc.rpc("Accept", [Field("kvs", "STRINTMap")], [Field("msg")],
-            NetFilter.from_dict({
-                "AppName": "paxos-accept",
-                "CntFwd": {"to": "ALL", "threshold": MAJORITY,
-                           "key": "kvs"}}))
-    return svc
+    @inc.rpc(app="paxos-accept",
+             cnt_fwd=inc.CntFwd(to="ALL", threshold=MAJORITY, key="kvs"))
+    def Accept(self, kvs: inc.STRINTMap) -> {"msg": inc.Plain}: ...
 
 
 def main():
@@ -41,26 +43,25 @@ def main():
     ap.add_argument("--proposals", type=int, default=50)
     args = ap.parse_args()
 
-    svc = build_service()
-    rt = NetRPC()
+    rt = inc.NetRPC()
     learned = []
     rt.server.register("Accept",
                        lambda req: learned.append(req) or {"msg": "learned"})
     rt.server.register("Prepare", lambda req: {"msg": "promise"})
 
-    acceptors = [rt.make_stub(svc) for _ in range(N_ACCEPTORS)]
+    acceptors = [rt.make_stub(Paxos) for _ in range(N_ACCEPTORS)]
 
     lat = []
     t0 = time.time()
     for ballot in range(args.proposals):
         # proposer wins Phase 1 in-network (first test&set wins)
-        r = acceptors[0].call("Prepare", {"kvs": {f"b{ballot}": 1}})
+        r = acceptors[0].Prepare(kvs={f"b{ballot}": 1}).result()
         assert r.get("msg") == "promise"
         # acceptors cast Phase-2 accepts; learners notified at majority
         t1 = time.perf_counter()
         committed = 0
         for i, a in enumerate(acceptors):
-            out = a.call("Accept", {"kvs": {f"b{ballot}": 1}})
+            out = a.Accept(kvs={f"b{ballot}": 1}).result()
             if out.get("msg") == "learned":
                 committed += 1
                 lat.append(time.perf_counter() - t1)

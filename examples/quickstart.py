@@ -1,56 +1,54 @@
 """Quickstart: an INC-accelerated RPC in ~30 lines (paper Figs. 2-4).
 
-Defines the gradient-update service exactly as the paper does — a protobuf-
-shaped service with one FPArray field and a NetFilter — and calls it from
-two clients. The network (the INC layer) aggregates; the reply arrives only
-after both clients contributed (CntFwd threshold=2), already summed.
+The typed declarative schema IS the user's entire "switch program": a
+service is a decorated class, an RPC is a method, and the INC semantics
+ride the field annotations — ``Agg[FPArray](precision=8, clear="copy")``
+says "this tensor is summed in-network at 8 fixed-point digits and the
+map is cleared after each aggregation round"; the ``CntFwd`` option says
+"reply only once 2 clients contributed".  The schema compiler validates
+all of it at class-definition time and lowers it onto the NetFilter/
+channel data plane; mistakes (a typo'd option, two addTo streams, a
+threshold without a vote key) fail here, not at drain time.
 
-The calls are issued through the async front: ``call_async`` returns an
-IncFuture immediately and the runtime's auto-drain scheduler coalesces the
-two workers' calls (they share the DT-1 channel) into ONE pipeline batch —
-no explicit drain() anywhere, the runtime owns scheduling.
+Every invocation returns an ``IncFuture`` — ``.result()`` is the sync
+path — and the runtime's auto-drain scheduler coalesces the two workers'
+calls (they share the DT-1 channel) into ONE pipeline batch.  The
+``drain=`` option on the service pins that schedule per-channel: size
+trigger 2, so the batch ships the moment both workers' calls are queued.
 
     PYTHONPATH=src python -m examples.quickstart
 """
 import numpy as np
 
-from repro.core.netfilter import NetFilter
-from repro.core.rpc import Field, Service
-from repro.core.runtime import DrainPolicy, IncRuntime
+import repro.api as inc
+
+
+# --- service definition (the user's entire 'switch program') ----------------
+@inc.service(app="DT-1",
+             drain=inc.DrainPolicy(max_batch=2, max_delay=0.05,
+                                   eager_window=False))
+class Gradient:
+    @inc.rpc(request_msg="NewGrad", reply_msg="AgtrGrad",
+             cnt_fwd=inc.CntFwd(to="ALL", threshold=2, key="ClientID"))
+    def Update(self, tensor: inc.Agg[inc.FPArray](precision=8,
+                                                  clear="copy")
+               ) -> {"tensor": inc.Get[inc.FPArray]}: ...
 
 
 def main():
-    # --- service definition (the user's entire 'switch program') ---------
-    svc = Service("Gradient")
-    svc.rpc(
-        "Update",
-        request=[Field("tensor", "FPArray")],
-        reply=[Field("tensor", "FPArray")],
-        netfilter=NetFilter.from_dict({
-            "AppName": "DT-1",
-            "Precision": 8,
-            "get": "AgtrGrad.tensor",
-            "addTo": "NewGrad.tensor",
-            "clear": "copy",
-            "modify": "nop",
-            "CntFwd": {"to": "ALL", "threshold": 2, "key": "ClientID"},
-        }))
-
     # --- two workers push gradients; INC sums them -----------------------
-    # size trigger = 2: the scheduler drains the shared channel the moment
-    # both workers' async calls are queued (time trigger as the backstop)
-    runtime = IncRuntime(policy=DrainPolicy(max_batch=2, max_delay=0.05,
-                                            eager_window=False))
-    worker_a = runtime.make_stub(svc)
-    worker_b = runtime.make_stub(svc)
+    runtime = inc.IncRuntime()
+    worker_a = runtime.make_stub(Gradient)
+    worker_b = runtime.make_stub(Gradient)
 
     grad_a = np.array([0.125, -1.5, 3.25, 0.0])
     grad_b = np.array([1.0, 0.5, -0.25, 2.0])
 
-    # async front: both workers get their IncFuture back immediately; the
-    # auto-drain scheduler coalesces the two calls into ONE channel batch
-    f_a = worker_a.call_async("Update", {"tensor": grad_a})
-    f_b = worker_b.call_async("Update", {"tensor": grad_b})
+    # futures-first: both workers get their IncFuture back immediately;
+    # the schema-declared size trigger (2) coalesces the two calls into
+    # ONE channel batch — no drain() anywhere, the runtime owns scheduling
+    f_a = worker_a.Update(tensor=grad_a)
+    f_b = worker_b.Update(tensor=grad_b)
     print("worker A reply (below threshold, dropped in-network):",
           f_a.result())
     agg = np.array([f_b.result()["tensor"][i] for i in range(4)])
@@ -63,13 +61,14 @@ def main():
     assert ch.stats.drained_batches == 1
     print("== in-network sum matches", (grad_a + grad_b).tolist())
 
-    # the sequential API is the same pipeline with batch size 1
-    r1 = worker_a.call("Update", {"tensor": grad_a})
-    r2 = worker_b.call("Update", {"tensor": grad_b})
+    # .result() on the returned future is the synchronous path — the same
+    # pipeline with batch size 1
+    r1 = worker_a.Update(tensor=grad_a).result()
+    r2 = worker_b.Update(tensor=grad_b).result()
     assert r1 == {} and np.allclose(
         np.array([r2["tensor"][i] for i in range(4)]), grad_a + grad_b,
         atol=1e-6)
-    print("== sequential call() round agrees")
+    print("== sequential .result() round agrees")
     runtime.close()
 
 

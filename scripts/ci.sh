@@ -45,4 +45,19 @@ if ! timeout 300 python -m benchmarks.async_latency --smoke > "$smoke_log" 2>&1;
 fi
 rm -f "$smoke_log"
 echo "async_latency smoke: OK"
+
+# examples lane: the four typed-schema INC apps are the front door — an
+# API regression here must fail CI, not users. Each example self-asserts
+# its INC results (aggregation sums, exact counters, quorum counts).
+for ex in quickstart mapreduce monitoring paxos; do
+    ex_log=$(mktemp)
+    if ! timeout 120 python -m "examples.$ex" > "$ex_log" 2>&1; then
+        echo "FAST LANE: FAIL (examples.$ex); output:"
+        cat "$ex_log"
+        rm -f "$ex_log"
+        exit 1
+    fi
+    rm -f "$ex_log"
+    echo "examples.$ex: OK"
+done
 echo "FAST LANE: OK"

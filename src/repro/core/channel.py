@@ -70,6 +70,23 @@ class ChannelStats:
     def note_trigger(self, trigger: str) -> None:
         self.drain_triggers[trigger] = self.drain_triggers.get(trigger, 0) + 1
 
+    def check_consistent(self) -> None:
+        """Every pipeline pass is attributed to exactly one source, so the
+        split counters must tile the totals: drained + explicit == total
+        for both calls and batches.  Raises AssertionError on drift (a
+        double-count or a missed attribution in a new entry point)."""
+        if (self.drained_calls + self.explicit_calls != self.calls
+                or self.drained_batches + self.explicit_batches
+                != self.batches):
+            raise AssertionError(
+                f"ChannelStats attribution drift: drained_calls="
+                f"{self.drained_calls} + explicit_calls="
+                f"{self.explicit_calls} != calls={self.calls} (or "
+                f"drained_batches={self.drained_batches} + "
+                f"explicit_batches={self.explicit_batches} != "
+                f"batches={self.batches}) — a pipeline entry point "
+                f"double-counted or skipped its source attribution")
+
 
 class Channel:
     """One application's INC connection: NetFilter + agents + partition.
@@ -90,6 +107,10 @@ class Channel:
         self.stats = ChannelStats()
         self.app_type = nf.app_type()
         self.pending: list = []
+        # per-channel auto-drain override (a runtime DrainPolicy), set by
+        # the schema layer's @inc.service/@inc.rpc drain= option; None ->
+        # the runtime's default policy
+        self.drain_policy = None
         # the ordered update buffer of the pipeline pass currently
         # executing on this channel (rpc._run_pipeline): a nested pass —
         # a handler's inline follow-up call — flushes it on entry so it

@@ -75,10 +75,13 @@ class NetFilter:
         if not re.match(r"^[\w.-]+$", self.app_name):
             raise ValueError(f"bad AppName: {self.app_name!r}")
         if not (0 <= self.precision <= 9):
-            raise ValueError("Precision must be in [0, 9] (10**p must fit "
-                             "the int32 fixed-point range headroom)")
+            raise ValueError(f"'Precision' must be in [0, 9] (10**p must "
+                             f"fit the int32 fixed-point range headroom), "
+                             f"got {self.precision} (app "
+                             f"{self.app_name!r})")
         if self.clear not in CLEAR_POLICIES:
-            raise ValueError(f"clear must be one of {CLEAR_POLICIES}")
+            raise ValueError(f"'clear' must be one of {CLEAR_POLICIES}, "
+                             f"got {self.clear!r} (app {self.app_name!r})")
 
     @property
     def scale(self) -> float:
@@ -100,27 +103,56 @@ class NetFilter:
 
     @classmethod
     def from_dict(cls, d: dict) -> "NetFilter":
+        """Parse + validate.  Unknown keys — top-level AND inside the
+        nested ``modify``/``CntFwd`` blocks — are rejected (a typo'd RIP
+        knob must not silently no-op), and every validation error names
+        the offending key and the AppName so a multi-filter deployment
+        (or the schema compiler, which reuses these messages) points at
+        the broken app, not just a bare ValueError."""
+        app = d.get("AppName", "<missing AppName>")
+
+        def bad(msg: str) -> ValueError:
+            return ValueError(f"NetFilter for app {app!r}: {msg}")
+
         known = {"AppName", "Precision", "get", "addTo", "clear", "modify",
                  "CntFwd"}
         unknown = set(d) - known
         if unknown:
-            raise ValueError(f"unknown NetFilter fields: {sorted(unknown)}")
+            raise bad(f"unknown NetFilter field(s) {sorted(unknown)} "
+                      f"(known: {sorted(known)})")
         modify = d.get("modify", "nop")
         if isinstance(modify, str):
-            modify = StreamModifySpec(op=modify)
-        else:
-            modify = StreamModifySpec(op=modify.get("op", "nop"),
-                                      para=int(modify.get("para", 0)))
+            modify = {"op": modify}
+        elif not isinstance(modify, dict):
+            raise bad(f"'modify' must be an op name or "
+                      f"{{'op':..,'para':..}}, got {modify!r}")
+        unknown = set(modify) - {"op", "para"}
+        if unknown:
+            raise bad(f"unknown key(s) {sorted(unknown)} in 'modify' "
+                      f"(known: ['op', 'para'])")
         cf = d.get("CntFwd", {})
-        cnt_fwd = CntFwdSpec(to=cf.get("to", "SRC"),
-                             threshold=int(cf.get("threshold", 0)),
-                             key=cf.get("key", "NULL"))
-        return cls(app_name=d["AppName"],
-                   precision=int(d.get("Precision", 0)),
-                   get=d.get("get", "nop"),
-                   add_to=d.get("addTo", "nop"),
-                   clear=d.get("clear", "nop"),
-                   modify=modify, cnt_fwd=cnt_fwd)
+        if not isinstance(cf, dict):
+            raise bad(f"'CntFwd' must be a dict, got {cf!r}")
+        unknown = set(cf) - {"to", "threshold", "key"}
+        if unknown:
+            raise bad(f"unknown key(s) {sorted(unknown)} in 'CntFwd' "
+                      f"(known: ['key', 'threshold', 'to'])")
+        try:
+            return cls(app_name=d["AppName"],
+                       precision=int(d.get("Precision", 0)),
+                       get=d.get("get", "nop"),
+                       add_to=d.get("addTo", "nop"),
+                       clear=d.get("clear", "nop"),
+                       modify=StreamModifySpec(
+                           op=modify.get("op", "nop"),
+                           para=int(modify.get("para", 0))),
+                       cnt_fwd=CntFwdSpec(
+                           to=cf.get("to", "SRC"),
+                           threshold=int(cf.get("threshold", 0)),
+                           key=cf.get("key", "NULL")))
+        except ValueError as e:
+            # constructor errors already name the field; add the app
+            raise bad(str(e)) from None
 
     @classmethod
     def load(cls, path: str | Path) -> "NetFilter":

@@ -1,11 +1,19 @@
 """RPCLayer: the gRPC-shaped programming model over the INCLayer (paper §4).
 
-Users define a service exactly as with vanilla gRPC — messages with typed
-fields, methods with request/reply types — replacing vanilla types with
-IEDTs (FPArray, IntArray, STRINTMap, Integer) for the fields the network
-should process, and attaching a NetFilter per method. The generated stub
-marshals arguments; IEDT fields travel the INC channel (the RIP pipeline
-below), normal fields pass through to the server handler untouched.
+The user-facing front door is the typed declarative schema
+(core/schema.py, re-exported via repro/api.py): a ``@inc.service`` class
+whose ``@inc.rpc`` methods carry INC semantics as field annotations,
+compiled eagerly into the Service/Method/NetFilter objects this module
+executes. What lives here is the *data plane* those schemas lower onto —
+and the legacy string-keyed surface (``Service``/``Field``/``Stub.call``)
+kept as the compatibility shim under the schema layer.
+
+A service is messages with typed fields and methods with request/reply
+types — vanilla types replaced by IEDTs (FPArray, IntArray, STRINTMap,
+Integer) for the fields the network should process, plus a NetFilter per
+method. The stub marshals arguments; IEDT fields travel the INC channel
+(the RIP pipeline below), normal fields pass through to the server
+handler untouched.
 
 Life of a call (Fig. 5): the client stub pushes the request stream through
 Stream.modify -> Map.addTo -> CntFwd gate; if CntFwd drops the packet the
@@ -27,9 +35,14 @@ shared channel:
     methods sharing a channel (the multi-application plane of Fig. 12)
     into one pipeline run per channel;
   - ``Stub.call_async(method, request) -> IncFuture`` — the async front:
-    returns immediately; the auto-drain scheduler of core/runtime.py
-    (IncRuntime) picks the batch boundaries via size/time/AIMD-window
-    triggers and resolves the future off-thread.
+    on IncRuntime it returns immediately and the auto-drain scheduler of
+    core/runtime.py picks the batch boundaries via size/time/AIMD-window
+    triggers, resolving the future off-thread; on plain NetRPC it runs
+    inline and returns a resolved future (one futures-first surface);
+  - ``Stub.call_batch_async(method, requests) -> list[IncFuture]`` — the
+    bulk async front (typed stubs expose it as ``stub.Rpc.batch``): the
+    whole list queues in issue order and the same triggers + admission
+    backpressure carve it into pipeline batches.
 
 Single-pipeline invariant: the batched execution preserves the sequential
 semantics — ``call_batch(reqs) == [call(r) for r in reqs]`` — by buffering
@@ -348,7 +361,10 @@ def _run_pipeline(channel: Channel, host_server: Server,
 # -- client stub -------------------------------------------------------------
 
 class Stub:
-    """The compiled client stub: user code is identical to vanilla gRPC."""
+    """The string-keyed client stub — the compatibility surface under the
+    typed schema layer (core/schema.py compiles declarative service
+    classes down to this + NetFilter; `make_stub` on a schema class
+    returns a generated TypedStub wrapping one of these)."""
 
     def __init__(self, service: Service, channels: dict[str, Channel],
                  server: Server, runtime: "NetRPC"):
@@ -373,10 +389,19 @@ class Stub:
         return self.runtime.run_direct(self, method, requests)
 
     def call_async(self, method: str, request: dict) -> "IncFuture":
-        """Enqueue one call and return immediately with its IncFuture; the
-        async runtime (core/runtime.py) drains the channel when a size,
-        time, or congestion-window trigger fires."""
+        """Enqueue one call and return immediately with its IncFuture.
+        On an IncRuntime the auto-drain scheduler picks the batch
+        boundary (size/time/window triggers); on a plain NetRPC the call
+        runs inline and the future comes back already resolved — one
+        futures-first surface either way."""
         return self.runtime.call_async(self, method, request)
+
+    def call_batch_async(self, method: str,
+                         requests: list[dict]) -> list["IncFuture"]:
+        """Bulk submission: one IncFuture per request, resolved through
+        the same scheduler triggers as call_async (the whole list lands
+        on the channel queue in issue order)."""
+        return self.runtime.call_batch_async(self, method, requests)
 
 
 # -- runtime -----------------------------------------------------------------
@@ -514,12 +539,42 @@ class IncFuture:
         return self._exc
 
 
+def resolve_futures(pairs: list, exc: BaseException | None) -> None:
+    """Deliver one pipeline pass's outcome through IncFutures with the
+    sequential mid-batch-failure semantics: completed calls resolve; the
+    call whose turn raised carries the exception; calls queued behind it
+    get a chained "abandoned" error.  If every call completed yet the
+    pipeline still raised, the failure came from the trailing buffer
+    flush — charge it to the last call (whose flush it would have been in
+    a sequential replay) so it cannot vanish.
+
+    ``pairs`` is ``[(IncFuture, _PlannedCall)]`` in issue order.
+    """
+    all_done = exc is not None and all(p.completed for _, p in pairs)
+    failed = False
+    for i, (fut, p) in enumerate(pairs):
+        if p.completed and not (all_done and i == len(pairs) - 1):
+            fut.set_result(p.reply)
+        elif not failed:
+            failed = True               # the call whose turn raised
+            fut.set_exception(exc)
+        else:
+            err = RuntimeError(
+                "call abandoned: its batch raised before this call "
+                "completed; resubmit it")
+            err.__cause__ = exc
+            fut.set_exception(err)
+
+
 class NetRPC:
     """In-process NetRPC runtime: controller + switch + agents.
 
     make_stub() is the analogue of `NewStub(channel)`; one Channel (GAID,
     switch partition) is created per method's NetFilter AppName, shared by
-    all stubs of that app — the multi-application data plane.
+    all stubs of that app — the multi-application data plane.  Passing a
+    schema class (core/schema.py, ``@inc.service``) instead of a legacy
+    Service returns the *generated typed stub* with one real method per
+    declared RPC and the unified futures-first calling convention.
 
     submit()/drain() is the micro-batching front: submitted calls queue on
     their channel and drain() executes one pipeline pass per channel, so
@@ -532,7 +587,13 @@ class NetRPC:
         self.server = Server()
         self._dirty: list[Channel] = []      # channels with queued calls
 
-    def make_stub(self, service: Service, n_slots: int = 4096) -> Stub:
+    def make_stub(self, service, n_slots: int = 4096):
+        schema = getattr(service, "__inc_schema__", None)
+        if schema is None and hasattr(service, "bind") \
+                and hasattr(service, "channel_policies"):
+            schema = service                 # a bare ServiceSchema
+        if schema is not None:
+            service = schema.service
         channels = {}
         for mname, md in service.methods.items():
             app = md.netfilter.app_name
@@ -541,7 +602,17 @@ class NetRPC:
             else:
                 ch = self.controller.register(md.netfilter, n_slots)
             channels[mname] = ch
-        return Stub(service, channels, self.server, runtime=self)
+        if schema is not None:
+            for app, pol in schema.channel_policies.items():
+                ch = self.controller.lookup(app)
+                if ch.drain_policy is not None and ch.drain_policy != pol:
+                    raise ValueError(
+                        f"channel {app!r} already carries a different "
+                        f"DrainPolicy override ({ch.drain_policy}); "
+                        f"schemas sharing a channel must agree")
+                ch.drain_policy = pol
+        stub = Stub(service, channels, self.server, runtime=self)
+        return schema.bind(stub) if schema is not None else stub
 
     def run_direct(self, stub: Stub, method: str,
                    requests: list[dict]) -> list[dict]:
@@ -555,9 +626,30 @@ class NetRPC:
                              [stub._plan(method, r) for r in requests])
 
     def call_async(self, stub: Stub, method: str, request: dict) -> IncFuture:
-        raise RuntimeError(
-            "call_async needs the auto-drain scheduler; construct the "
-            "runtime as repro.core.runtime.IncRuntime instead of NetRPC")
+        """Futures-first surface without a scheduler: the call runs inline
+        (one N=1 pipeline pass) and its IncFuture comes back already
+        resolved.  IncRuntime overrides this with the auto-drain queue."""
+        return self.call_batch_async(stub, method, [request])[0]
+
+    def call_batch_async(self, stub: Stub, method: str,
+                         requests: list[dict]) -> list[IncFuture]:
+        """Bulk submission on the scheduler-less runtime: one pipeline
+        pass over the whole list, futures resolved in place with the
+        sequential mid-batch-failure semantics (resolve_futures)."""
+        if not requests:
+            return []
+        ch = stub.channels[method]
+        if ch.pending:
+            _drain_channel(ch, self.server)   # preserve issue order
+        planned = [stub._plan(method, r) for r in requests]
+        futs = [IncFuture() for _ in planned]
+        exc = None
+        try:
+            _run_pipeline(ch, self.server, planned)
+        except BaseException as e:
+            exc = e
+        resolve_futures(list(zip(futs, planned)), exc)
+        return futs
 
     def submit(self, stub: Stub, method: str, request: dict) -> Ticket:
         ch = stub.channels[method]

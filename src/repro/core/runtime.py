@@ -57,7 +57,8 @@ from collections import deque
 from dataclasses import dataclass
 
 from repro.core.channel import Channel
-from repro.core.rpc import IncFuture, NetRPC, Stub, _run_pipeline
+from repro.core.rpc import (IncFuture, NetRPC, Stub, _run_pipeline,
+                            resolve_futures)
 from repro.core.transport import AimdState, W_MAX_DEFAULT
 
 
@@ -84,13 +85,18 @@ class DrainPolicy:
 
 
 class _ChannelQueue:
-    """Scheduler state for one channel (GAID)."""
+    """Scheduler state for one channel (GAID).  ``policy`` is the
+    channel's effective DrainPolicy: a schema-declared per-channel
+    override (Channel.drain_policy) when present, else the runtime
+    default — every trigger decision for this queue reads it."""
 
-    __slots__ = ("channel", "entries", "aimd", "occupancy", "busy_owner",
-                 "demand", "last_service", "backlog_limit", "wake")
+    __slots__ = ("channel", "policy", "entries", "aimd", "occupancy",
+                 "busy_owner", "demand", "last_service", "backlog_limit",
+                 "wake")
 
     def __init__(self, channel: Channel, policy: DrainPolicy, now: float):
         self.channel = channel
+        self.policy = policy
         self.wake = None                   # demand hook, set by the runtime
         self.entries: deque = deque()      # (IncFuture, _PlannedCall, ts)
         self.aimd = AimdState(cw=policy.initial_cw(), cw_max=policy.w_max)
@@ -156,46 +162,76 @@ class IncRuntime(NetRPC):
 
     # -- async front ---------------------------------------------------------
 
+    def _queue_for(self, ch: Channel) -> _ChannelQueue:
+        """Get-or-create scheduler state for a channel (caller holds
+        _work).  The channel's schema-declared DrainPolicy override
+        (Channel.drain_policy) wins over the runtime default."""
+        if self._closed:
+            raise RuntimeError("runtime is closed")
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._loop, name="inc-runtime-drain", daemon=True)
+            self._thread.start()
+        q = self._queues.get(ch.gaid)
+        if q is None:
+            q = self._queues[ch.gaid] = _ChannelQueue(
+                ch, ch.drain_policy or self.policy, self._clock())
+            gaid = ch.gaid
+            q.wake = lambda: self._demand(gaid)
+        return q
+
+    def _enqueue(self, q: _ChannelQueue, planned) -> IncFuture:
+        """Append one planned call to a channel queue (caller holds
+        _work), applying admission backpressure: a shrunk congestion
+        window bounds the backlog a producer may build before it blocks.
+        Handlers (any thread inside a pipeline) are exempt: they hold the
+        plane lock the draining thread would need, so waiting deadlocks.
+        """
+        ch = q.channel
+        if (len(q.entries) >= q.backlog_limit
+                and threading.current_thread() is not self._thread
+                and not self._in_pipeline()):
+            ch.stats.admission_waits += 1
+            while (len(q.entries) >= q.backlog_limit
+                   and not self._closed):
+                self._work.wait()
+            if self._closed:
+                raise RuntimeError("runtime is closed")
+        fut = IncFuture(wake=q.wake)
+        q.entries.append((fut, planned, self._clock()))
+        n = len(q.entries)
+        ch.stats.note_queue_depth(n)
+        # wake the scheduler only at trigger boundaries — the first
+        # entry (arms the time trigger / window check) and the size
+        # threshold. Waking it per enqueue would make every submission
+        # pay a GIL+lock round trip with the drain thread.
+        if n == 1 or n == q.policy.max_batch or q.demand:
+            self._work.notify_all()
+        return fut
+
     def call_async(self, stub: Stub, method: str, request: dict) -> IncFuture:
         ch = stub.channels[method]
         planned = stub._plan(method, request)
         with self._work:
-            if self._closed:
-                raise RuntimeError("runtime is closed")
-            if self._thread is None:
-                self._thread = threading.Thread(
-                    target=self._loop, name="inc-runtime-drain", daemon=True)
-                self._thread.start()
-            q = self._queues.get(ch.gaid)
-            if q is None:
-                q = self._queues[ch.gaid] = _ChannelQueue(
-                    ch, self.policy, self._clock())
-                gaid = ch.gaid
-                q.wake = lambda: self._demand(gaid)
-            # admission backpressure: a shrunk congestion window bounds the
-            # backlog a producer may build before it blocks. Handlers (any
-            # thread inside a pipeline) are exempt: they hold the plane
-            # lock the draining thread would need, so waiting deadlocks.
-            if (len(q.entries) >= q.backlog_limit
-                    and threading.current_thread() is not self._thread
-                    and not self._in_pipeline()):
-                ch.stats.admission_waits += 1
-                while (len(q.entries) >= q.backlog_limit
-                       and not self._closed):
-                    self._work.wait()
-                if self._closed:
-                    raise RuntimeError("runtime is closed")
-            fut = IncFuture(wake=q.wake)
-            q.entries.append((fut, planned, self._clock()))
-            n = len(q.entries)
-            ch.stats.note_queue_depth(n)
-            # wake the scheduler only at trigger boundaries — the first
-            # entry (arms the time trigger / window check) and the size
-            # threshold. Waking it per enqueue would make every submission
-            # pay a GIL+lock round trip with the drain thread.
-            if n == 1 or n == self.policy.max_batch or q.demand:
-                self._work.notify_all()
-        return fut
+            q = self._queue_for(ch)
+            return self._enqueue(q, planned)
+
+    def call_batch_async(self, stub: Stub, method: str,
+                         requests: list[dict]) -> list[IncFuture]:
+        """Bulk submission through the scheduler (the ROADMAP
+        ``call_batch_async`` gap): the whole list lands on the channel
+        queue in issue order under one lock round trip, and the same
+        size/time/window triggers decide the pipeline batch boundaries.
+        Admission backpressure applies per call: once the backlog limit
+        is hit, the submitter blocks mid-list until the scheduler drains
+        room, so a huge batch cannot bypass the congestion coupling."""
+        ch = stub.channels[method]
+        planned = [stub._plan(method, r) for r in requests]
+        if not planned:
+            return []
+        with self._work:
+            q = self._queue_for(ch)
+            return [self._enqueue(q, p) for p in planned]
 
     def submit(self, stub: Stub, method: str, request: dict) -> IncFuture:
         """On the async runtime submit() IS call_async: the returned
@@ -255,7 +291,10 @@ class IncRuntime(NetRPC):
         IncFutures first; the first one is re-raised after every channel
         has been flushed.
         """
-        if threading.current_thread() is self._thread:
+        if threading.current_thread() is self._thread or self._in_pipeline():
+            # same cycle either way: an inline pass marks its channel busy
+            # before running handlers, so a handler's drain() would wait
+            # forever on a busy flag owned by its own (blocked) thread
             raise RuntimeError(
                 "drain() inside a server handler would deadlock the drain "
                 "worker; handlers may only call_async follow-up work")
@@ -321,11 +360,23 @@ class IncRuntime(NetRPC):
     # -- observability -------------------------------------------------------
 
     def scheduling_report(self) -> dict:
-        """Per-GAID scheduling behavior of the multi-tenant plane."""
+        """Per-GAID scheduling behavior of the multi-tenant plane.
+
+        Also audits the stats split: every pipeline pass is attributed to
+        exactly one source, so ``drained + explicit == total`` must hold
+        for calls and batches — a double-count (or a new entry point that
+        forgot its attribution) raises here rather than silently skewing
+        the coalescing-efficiency numbers this report exists to expose.
+        The plane lock is taken first (the established _plane -> _work
+        order, re-entrant for handlers): the per-pass counters mutate
+        under it mid-pipeline, so auditing without it could observe a
+        half-updated split and raise spuriously.
+        """
         out = {}
-        with self._work:
+        with self._plane, self._work:
             for gaid, q in self._queues.items():
                 st = q.channel.stats
+                st.check_consistent()
                 out[q.channel.netfilter.app_name] = {
                     "gaid": gaid,
                     "queue_depth": len(q.entries),
@@ -333,6 +384,8 @@ class IncRuntime(NetRPC):
                     "cw": q.aimd.cw,
                     "occupancy": round(q.occupancy, 1),
                     "drains": dict(st.drain_triggers),
+                    "calls": st.calls,
+                    "explicit_calls": st.explicit_calls,
                     "drained_calls": st.drained_calls,
                     "drained_batches": st.drained_batches,
                     "mean_drained_batch": round(st.mean_drained_batch, 2),
@@ -360,7 +413,7 @@ class IncRuntime(NetRPC):
         """Decay the simulated switch ingress queue (continuous service)."""
         dt = max(0.0, now - q.last_service)
         q.last_service = now
-        q.occupancy = max(0.0, q.occupancy - dt * self.policy.service_rate)
+        q.occupancy = max(0.0, q.occupancy - dt * q.policy.service_rate)
 
     def _due(self, q: _ChannelQueue, now: float):
         """(trigger, take) if this queue should drain now, else None."""
@@ -368,15 +421,15 @@ class IncRuntime(NetRPC):
         if n == 0 or q.busy_owner is not None:
             return None
         room = q.room()
-        take = min(n, self.policy.max_batch, room)
+        take = min(n, q.policy.max_batch, room)
         if take > 0:
-            if n >= self.policy.max_batch:
+            if n >= q.policy.max_batch:
                 return ("size", take)
             if q.demand:
                 return ("flush", take)
-            if now - q.entries[0][2] >= self.policy.max_delay:
+            if now - q.entries[0][2] >= q.policy.max_delay:
                 return ("time", take)
-        if self.policy.eager_window and n <= room:
+        if q.policy.eager_window and n <= room:
             return ("window", n)
         return None
 
@@ -386,13 +439,13 @@ class IncRuntime(NetRPC):
         for q in self._queues.values():
             if not q.entries or q.busy_owner is not None:
                 continue
-            cand = q.entries[0][2] + self.policy.max_delay - now
+            cand = q.entries[0][2] + q.policy.max_delay - now
             if q.room() == 0:
                 # no drain can happen before the simulated switch services
                 # one packet of window room, however overdue the time
                 # trigger is — sleeping shorter would busy-poll the scan
                 decay = (q.occupancy - q.aimd.cw + 1) \
-                    / self.policy.service_rate
+                    / q.policy.service_rate
                 cand = max(cand, decay)
             best = cand if best is None else min(best, cand)
         if best is None:
@@ -457,26 +510,11 @@ class IncRuntime(NetRPC):
             # one ACK per batch; ECN set iff the simulated ingress queue is
             # above threshold (persisted implicitly: occupancy only decays
             # through service, as the transport persists ECN in the map)
-            q.aimd.on_ack(q.occupancy >= self.policy.ecn_threshold)
-            q.backlog_limit = self.policy.backlog_limit(q.aimd.cw)
+            q.aimd.on_ack(q.occupancy >= q.policy.ecn_threshold)
+            q.backlog_limit = q.policy.backlog_limit(q.aimd.cw)
             ch.stats.note_trigger(trigger)
-        # if every call completed yet the pipeline still raised, the
-        # failure came from the trailing buffer flush — charge it to the
-        # last call (whose flush it would have been in a sequential
-        # replay) so it cannot vanish: the scheduler loop deliberately
-        # swallows the return value
-        all_done = exc is not None and all(p.completed for _, p, _ in entries)
-        failed = False
-        for i, (fut, p, _) in enumerate(entries):
-            if p.completed and not (all_done and i == len(entries) - 1):
-                fut.set_result(p.reply)
-            elif not failed:
-                failed = True               # the call whose turn raised
-                fut.set_exception(exc)
-            else:
-                err = RuntimeError(
-                    "call abandoned: its batch raised before this call "
-                    "completed; resubmit it")
-                err.__cause__ = exc
-                fut.set_exception(err)
+        # the scheduler loop deliberately swallows the return value, so
+        # the outcome (including a trailing-flush failure, charged to the
+        # last call) must be fully delivered through the futures
+        resolve_futures([(fut, p) for fut, p, _ in entries], exc)
         return exc

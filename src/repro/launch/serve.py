@@ -48,8 +48,10 @@ def serve(*, arch: str, prompt_len: int, decode_n: int, batch: int,
     b = pipeline.make_batch(dcfg, 0)
     b = pipeline.add_modality_stubs(b, cfg, batch)
 
-    # serve telemetry on the async INC runtime: per-token counters enqueue
-    # on the decode path and coalesce off-thread (never a blocking INC call)
+    # serve telemetry on the async INC runtime (typed schema services,
+    # launch/steps.py): per-token counters enqueue on the decode path
+    # through the generated stubs and coalesce off-thread (never a
+    # blocking INC call)
     telemetry = steps.TrainTelemetry(app_prefix="serve")
 
     t0 = time.time()

@@ -33,13 +33,12 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+import repro.api as inc
 from repro import compat
+from repro.api import DrainPolicy, IncFuture, IncRuntime
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import inc_agg
 from repro.core.inc_agg import IncAggConfig
-from repro.core.netfilter import NetFilter
-from repro.core.rpc import Field, IncFuture, Service
-from repro.core.runtime import DrainPolicy, IncRuntime
 from repro.models import api
 from repro.optim import adamw
 from repro.sharding import rules
@@ -56,43 +55,43 @@ SEQ_SHARDED_BLOCKS = ("global", "moe", "selfcross")
 METRIC_PRECISION = 3
 
 
-def telemetry_service(app: str) -> Service:
+def telemetry_service(app: str):
     """The loop's metric stream as an AsyncAgtr app: per-step scalars ride
-    Map.addTo (summed in-network), monitors read them back with Map.get."""
-    svc = Service("Telemetry")
-    svc.rpc("PushMetrics", [Field("kvs", "STRINTMap")], [Field("msg")],
-            NetFilter.from_dict({"AppName": app,
-                                 "Precision": METRIC_PRECISION,
-                                 "addTo": "MetricPush.kvs"}))
-    svc.rpc("ReadMetrics", [Field("kvs", "STRINTMap")],
-            [Field("kvs", "STRINTMap")],
-            NetFilter.from_dict({"AppName": app,
-                                 "Precision": METRIC_PRECISION,
-                                 "get": "MetricReply.kvs"}))
-    return svc
+    Map.addTo (summed in-network), monitors read them back with Map.get.
+    A typed schema class parameterized by AppName (one channel per loop)."""
+    @inc.service(app=app, name="Telemetry")
+    class Telemetry:
+        @inc.rpc(request_msg="MetricPush")
+        def PushMetrics(self, kvs: inc.Agg[inc.STRINTMap](
+                precision=METRIC_PRECISION)) -> {"msg": inc.Plain}: ...
+
+        @inc.rpc(reply_msg="MetricReply")
+        def ReadMetrics(self, kvs: inc.ReadMostly[inc.STRINTMap](
+                precision=METRIC_PRECISION)): ...
+    return Telemetry
 
 
-def agreement_service(threshold: int, app: str) -> Service:
+def agreement_service(threshold: int, app: str):
     """Step-commit quorum as an Agreement app: the threshold-th worker vote
     for a step key forwards exactly one commit notification (CntFwd)."""
-    svc = Service("StepAgreement")
-    svc.rpc("CommitStep", [Field("kvs", "STRINTMap")], [Field("msg")],
-            NetFilter.from_dict({
-                "AppName": app,
-                "CntFwd": {"to": "ALL", "threshold": threshold,
-                           "key": "CommitVote.kvs"}}))
-    return svc
+    @inc.service(app=app, name="StepAgreement")
+    class StepAgreement:
+        @inc.rpc(cnt_fwd=inc.CntFwd(to="ALL", threshold=threshold,
+                                    key="CommitVote.kvs"))
+        def CommitStep(self, kvs: inc.STRINTMap) -> {"msg": inc.Plain}: ...
+    return StepAgreement
 
 
 class TrainTelemetry:
     """Metric + agreement channels for the train/serve loops, batched.
 
     The hot path calls push()/vote(), which enqueue on the async runtime
-    and return immediately: the scheduler coalesces many steps' worth of
-    metric pushes into one drained pipeline batch (no N=1 INC call ever
-    runs on the step path). ReadMetrics is a synchronous call, so it
-    drains queued pushes first — reads are always consistent with every
-    push issued before them.
+    through the typed stubs and return immediately: the scheduler
+    coalesces many steps' worth of metric pushes into one drained
+    pipeline batch (no N=1 INC call ever runs on the step path). read()
+    resolves its ReadMetrics future in place; the query rides the same
+    channel queue, so FIFO order keeps reads consistent with every push
+    issued before them.
     """
 
     def __init__(self, runtime: IncRuntime | None = None, *,
@@ -128,21 +127,22 @@ class TrainTelemetry:
         """Accumulate metric scalars in-network; returns the push future."""
         self._names.update(scalars)
         kvs = {k: float(v) for k, v in scalars.items()}
-        return self.metrics.call_async("PushMetrics", {"kvs": kvs})
+        return self.metrics.PushMetrics(kvs=kvs)
 
     def vote(self, step: int) -> IncFuture:
         """Cast this worker's commit vote for ``step``; the future's reply
         is non-empty iff this vote completed the quorum."""
-        f = self.agree.call_async("CommitStep", {"kvs": {f"step-{step}": 1}})
+        f = self.agree.CommitStep(kvs={f"step-{step}": 1})
         self._last_vote = f
         return f
 
     def read(self, names=None) -> dict[str, float]:
-        """Read accumulated metrics (drains queued pushes first)."""
+        """Read accumulated metrics (queued pushes execute first: the
+        read rides the same channel queue, and result() demand-flushes)."""
         keys = {k: 0 for k in (names or sorted(self._names))}
         if not keys:
             return {}
-        out = self.metrics.call("ReadMetrics", {"kvs": keys})
+        out = self.metrics.ReadMetrics(kvs=keys).result()
         return {k: float(v) for k, v in out.get("kvs", {}).items()}
 
     def commits(self) -> int:

@@ -60,8 +60,9 @@ def train_loop(*, arch: str, inc_mode: str, steps_n: int, seq: int,
 
     dcfg = pipeline.DataConfig(vocab=cfg.vocab, batch=batch, seq_len=seq,
                                kind=data_kind)
-    # metric + agreement channels on the async INC runtime: per-step pushes
-    # and commit votes enqueue and return; the scheduler coalesces them
+    # metric + agreement channels on the async INC runtime (typed schema
+    # services, launch/steps.py): per-step pushes and commit votes enqueue
+    # through the generated stubs and return; the scheduler coalesces them
     # into drained batches off the hot path (no N=1 INC call per step)
     telemetry = steps.TrainTelemetry(n_workers=prog.meta["n_dp"],
                                      quorum=quorum, app_prefix="train")

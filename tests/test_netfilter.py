@@ -45,10 +45,34 @@ def test_app_type_classification():
     {"AppName": "x", "modify": {"op": "divide"}},
     {"AppName": "x", "CntFwd": {"to": "EVERYONE"}},
     {"AppName": "x", "unknown_field": 1},
+    # unknown keys nested inside the RIP blocks must not silently no-op
+    {"AppName": "x", "modify": {"op": "max", "parma": 3}},
+    {"AppName": "x", "CntFwd": {"to": "SRC", "treshold": 2, "key": "k"}},
+    {"AppName": "x", "modify": 7},
+    {"AppName": "x", "CntFwd": [1, 2]},
 ])
 def test_validation_rejects(bad):
     with pytest.raises((ValueError, KeyError)):
         NetFilter.from_dict(bad)
+
+
+@pytest.mark.parametrize("bad,needle", [
+    ({"AppName": "DT-9", "unknown_field": 1}, "unknown_field"),
+    ({"AppName": "DT-9", "Precision": 11}, "Precision"),
+    ({"AppName": "DT-9", "clear": "wipe"}, "clear"),
+    ({"AppName": "DT-9", "modify": {"op": "max", "parma": 3}}, "parma"),
+    ({"AppName": "DT-9", "CntFwd": {"treshold": 2}}, "treshold"),
+    ({"AppName": "DT-9", "CntFwd": {"to": "EVERYONE"}}, "EVERYONE"),
+])
+def test_errors_name_offending_key_and_app(bad, needle):
+    """Every from_dict validation error carries the AppName and the
+    offending key, so a multi-filter deployment (and the schema compiler,
+    which reuses these messages) points at the broken app."""
+    with pytest.raises(ValueError) as ei:
+        NetFilter.from_dict(bad)
+    msg = str(ei.value)
+    assert "DT-9" in msg, msg
+    assert needle in msg, msg
 
 
 def test_cntfwd_threshold_one_is_test_and_set():

@@ -320,6 +320,31 @@ def test_handler_inline_call_on_other_channel_does_not_deadlock():
         rt.close()
 
 
+def test_drain_inside_handler_raises_instead_of_deadlocking():
+    """A handler calling rt.drain() would wait forever on the busy flag
+    its own (blocked) thread holds — the guard must convert that into a
+    RuntimeError on the inline user-thread path too, not just on the
+    scheduler thread."""
+    rt = IncRuntime(policy=DrainPolicy(max_batch=1000, max_delay=30.0,
+                                       eager_window=False))
+    try:
+        caught = []
+
+        def handler(req):
+            try:
+                rt.drain()
+            except RuntimeError as e:
+                caught.append(str(e))
+            return {"payload": "ok"}
+        rt.server.register("Push", handler)
+        stub = rt.make_stub(monitor_service())
+        out = stub.call("Push", {"kvs": {"a": 1}, "payload": "p"})
+        assert out == {"payload": "ok"}
+        assert caught and "deadlock" in caught[0]
+    finally:
+        rt.close()
+
+
 def test_close_completes_when_flush_raises():
     rt = IncRuntime(policy=DrainPolicy(max_batch=1000, max_delay=30.0,
                                        eager_window=False))
