@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast examples bench-batch bench-async
+.PHONY: test test-fast examples bench-batch bench-async bench-wire
 
 # full tier-1 suite (includes the slow multidevice subprocess tests)
 test:
@@ -25,3 +25,7 @@ bench-batch:
 # async runtime sweep: p50/p99 latency + throughput per auto-drain trigger
 bench-async:
 	python benchmarks/async_latency.py
+
+# GPV wire-path sweep: tensor marshalling calls/sec, dict path vs array path
+bench-wire:
+	python benchmarks/wire_path.py --csv

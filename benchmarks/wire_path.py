@@ -1,0 +1,147 @@
+"""GPV wire-path sweep: tensor marshalling cost, dict path vs array path.
+
+ISSUE 4's question: how much of a tensor-channel call was per-element
+Python marshalling?  Both legs run the SAME pipeline, switch simulation,
+and vectorized INC map — the only difference is ``set_gpv``: the baseline
+leg shreds every tensor into a ``{index: value}`` dict on the way in and
+out (the pre-GPV wire format), the GPV leg carries it as contiguous
+ndarrays end-to-end (TensorSegment).  Each sweep point reports calls/sec
+and elements/sec marshalled; the 64k row self-reports the ISSUE acceptance
+gate (GPV >= 5x dict, same session, same config).
+
+Every repeat replays an identical gradient stream (SyncAgtr-style
+Update: Agg[FPArray] + Get reply + clear="copy") on a fresh runtime with
+enough switch slots to map the whole payload; the first (grant-storm)
+call is warmup, timed calls hit the steady mapped state. A correctness
+probe asserts both legs return element-identical aggregates before any
+timing is trusted.
+
+    PYTHONPATH=src python -m benchmarks.wire_path [--smoke] [--csv]
+"""
+from __future__ import annotations
+
+if __package__ in (None, ""):            # executed as a bare script
+    import sys
+    from pathlib import Path
+    _root = Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))
+
+import time
+
+import numpy as np
+
+import repro.api as inc
+from repro.core import rpc as rpc_mod
+
+SIZES = (1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18)
+GATE_N = 1 << 16        # the acceptance-row payload size
+GATE_X = 5.0            # ISSUE 4: GPV >= 5x dict calls/sec at 64k
+
+
+@inc.service(app="WIRE-1")
+class Gradient:
+    @inc.rpc(request_msg="NewGrad", reply_msg="AgtrGrad")
+    def Update(self, tensor: inc.Agg[inc.FPArray](precision=6,
+                                                  clear="copy")
+               ) -> {"tensor": inc.Get[inc.FPArray]}: ...
+
+
+def _fresh(n: int):
+    rt = inc.NetRPC()
+    return rt.make_stub(Gradient, n_slots=n)
+
+
+def _probe(n: int = 256) -> None:
+    """Both legs must agree element-exactly before timings mean anything."""
+    g = np.random.RandomState(0).randn(n).astype(np.float32)
+    out = {}
+    for gpv in (True, False):
+        prev = rpc_mod.set_gpv(gpv)
+        try:
+            stub = _fresh(n)
+            stub.Update(tensor=g).result()
+            r = stub.Update(tensor=g).result()["tensor"]
+            out[gpv] = [r[i] for i in range(n)]
+        finally:
+            rpc_mod.set_gpv(prev)
+    assert out[True] == out[False], "GPV leg diverged from dict leg"
+
+
+def _time_leg(gpv: bool, n: int, iters: int, repeats: int) -> float:
+    """Fastest mean seconds/call over ``repeats`` timed replays."""
+    import gc
+    g = np.random.RandomState(1).randn(n).astype(np.float32)
+    best = None
+    prev = rpc_mod.set_gpv(gpv)
+    try:
+        for _ in range(repeats):
+            stub = _fresh(n)
+            stub.Update(tensor=g).result()      # grant-storm warmup
+            gc.collect()
+            gc.disable()
+            try:
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    stub.Update(tensor=g).result()
+                dt = (time.perf_counter() - t0) / iters
+            finally:
+                gc.enable()
+            best = dt if best is None else min(best, dt)
+    finally:
+        rpc_mod.set_gpv(prev)
+    return best
+
+
+def run(sizes=SIZES, repeats: int = 3) -> list:
+    _probe()
+    rows = []
+    gate = None
+    for n in sizes:
+        iters = max(2, min(12, (1 << 19) // n))
+        # interleave legs per repeat so box jitter hits both alike
+        t_dict = t_gpv = None
+        for _ in range(repeats):
+            d = _time_leg(False, n, iters, 1)
+            a = _time_leg(True, n, iters, 1)
+            t_dict = d if t_dict is None else min(t_dict, d)
+            t_gpv = a if t_gpv is None else min(t_gpv, a)
+        ratio = t_dict / t_gpv
+        if n == GATE_N:
+            gate = ratio
+        for leg, dt in (("dict", t_dict), ("gpv", t_gpv)):
+            rows.append((f"t_wire/{leg}/n{n}", round(dt * 1e6, 1),
+                         f"calls_per_sec={1.0 / dt:.1f}"
+                         f" elems_per_sec={n / dt:.0f}"))
+        rows.append((f"t_wire/speedup/n{n}", 0, f"gpv_vs_dict={ratio:.2f}x"))
+    if gate is not None:
+        rows.append(("t_wire/acceptance", 0,
+                     f"gpv_vs_dict@{GATE_N}={gate:.2f}x"
+                     f" (need >= {GATE_X:.0f}x:"
+                     f" {'PASS' if gate >= GATE_X else 'FAIL'})"))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI (correct plumbing, noisy numbers)")
+    ap.add_argument("--csv", action="store_true",
+                    help="append the rows to benchmarks/results.csv")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+    sizes = (1 << 10, 1 << 12) if args.smoke else SIZES
+    rows = run(sizes, repeats=1 if args.smoke else args.repeats)
+    lines = [",".join(str(x) for x in row) for row in rows]
+    for ln in lines:
+        print(ln)
+    if args.csv:
+        from pathlib import Path
+        out = Path(__file__).resolve().parent / "results.csv"
+        with out.open("a") as f:
+            f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

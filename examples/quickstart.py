@@ -51,8 +51,11 @@ def main():
     f_b = worker_b.Update(tensor=grad_b)
     print("worker A reply (below threshold, dropped in-network):",
           f_a.result())
-    agg = np.array([f_b.result()["tensor"][i] for i in range(4)])
+    # GPV wire path: the FPArray reply IS an ndarray shaped like the
+    # request — no per-element unpacking, straight back into numpy math
+    agg = f_b.result()["tensor"]
     print("worker B reply (aggregated):", agg)
+    assert isinstance(agg, np.ndarray) and agg.shape == grad_a.shape
     assert np.allclose(agg, grad_a + grad_b, atol=1e-6)
     ch = worker_a.channels["Update"]
     print(f"auto-drained {ch.stats.drained_calls} calls in "
@@ -65,9 +68,8 @@ def main():
     # pipeline with batch size 1
     r1 = worker_a.Update(tensor=grad_a).result()
     r2 = worker_b.Update(tensor=grad_b).result()
-    assert r1 == {} and np.allclose(
-        np.array([r2["tensor"][i] for i in range(4)]), grad_a + grad_b,
-        atol=1e-6)
+    assert r1 == {} and np.allclose(r2["tensor"], grad_a + grad_b,
+                                    atol=1e-6)
     print("== sequential .result() round agrees")
     runtime.close()
 

@@ -46,6 +46,18 @@ fi
 rm -f "$smoke_log"
 echo "async_latency smoke: OK"
 
+# smoke the GPV wire-path benchmark (tiny sizes; includes the dict-vs-gpv
+# correctness probe, so a wire-format divergence fails CI here)
+smoke_log=$(mktemp)
+if ! timeout 300 python -m benchmarks.wire_path --smoke > "$smoke_log" 2>&1; then
+    echo "FAST LANE: FAIL (wire_path smoke); output:"
+    cat "$smoke_log"
+    rm -f "$smoke_log"
+    exit 1
+fi
+rm -f "$smoke_log"
+echo "wire_path smoke: OK"
+
 # examples lane: the four typed-schema INC apps are the front door — an
 # API regression here must fail CI, not users. Each example self-asserts
 # its INC results (aggregation sums, exact counters, quorum counts).

@@ -48,6 +48,13 @@ class ChannelStats:
     drain_triggers: dict = field(
         default_factory=lambda: {t: 0 for t in DRAIN_TRIGGERS})
     admission_waits: int = 0  # submitters blocked by AIMD backpressure
+    # GPV wire-path coverage: calls whose addTo stream travelled as an
+    # array-native TensorSegment (vs the per-element dict path), and the
+    # total elements marshalled that way — benchmarks/wire_path.py and
+    # scheduling_report() surface these so a payload silently falling off
+    # the fast path is visible
+    gpv_calls: int = 0
+    gpv_elems: int = 0
 
     @property
     def mean_batch(self) -> float:

@@ -18,12 +18,23 @@ On TPU the "switch memory" is a VMEM-resident register file and this module
 is the host-side control plane that decides which logical addresses deserve
 a physical slot. The data-plane update itself (kernels/sparse_addto.py) runs
 on-device at line rate.
+
+GPV wire path (array-native tensors).  Every per-element Python loop on the
+update/read path is gone: the logical->physical mapping and the host spill
+keep lazily-rebuilt sorted-array snapshots (invalidated by a version counter
+on the backing dicts), so ``addto_batch``/``read_batch`` are one
+``searchsorted`` + one kernel batch regardless of how many RPC calls
+contributed; per-window LRU usage counters accumulate as folded
+(keys, counts) array chunks and materialize into the legacy ``Counter`` only
+when a decision actually needs it; and ``ClientAgent`` resolves dense tensor
+indices (identity hash) through a cached arange table instead of a dict
+lookup per element.
 """
 from __future__ import annotations
 
 import zlib
-from collections import Counter, defaultdict
-from dataclasses import dataclass, field
+from collections import Counter
+from dataclasses import dataclass
 
 import jax.numpy as jnp
 import numpy as np
@@ -41,6 +52,143 @@ def hash_key(key: str | bytes | int) -> int:
     if isinstance(key, str):
         key = key.encode()
     return zlib.crc32(key) & 0xFFFFFFFF
+
+
+# -- vectorized fixed-point quantization (the GPV value path) -----------------
+
+def quantize_scalar_ref(values, scale) -> list[int]:
+    """The pre-GPV per-element quantization, kept as the semantic oracle:
+    ``int(round(v * scale))`` (ints pass through unscaled at scale 1).
+    The vectorized path below must stay element-exact against this — the
+    property tests in tests/test_wire_path.py pin it across signs,
+    halfway cases, and precisions 0-8."""
+    if scale == 1:
+        return [v if type(v) is int else int(round(v)) for v in values]
+    return [int(round(v * scale)) for v in values]
+
+
+def quantize_stream(values: np.ndarray, scale) -> np.ndarray:
+    """Vectorized fixed-point quantization of a numeric value stream:
+    int64 ``rint(v * scale)``.
+
+    Element-exact vs :func:`quantize_scalar_ref`: ``np.rint`` and Python's
+    ``round`` both round half to even, and the multiply keeps the input's
+    dtype so promotion matches the scalar path (a float32 stream is scaled
+    in float32 either way). Integer streams skip the float detour
+    entirely (``np.rint`` would otherwise promote them to float64).
+    """
+    arr = np.asarray(values)
+    if arr.dtype.kind in "biu":
+        if arr.dtype.kind == "u" and len(arr) \
+                and int(arr.max()) > 2 ** 63 - 1:
+            raise OverflowError("value exceeds int64 fixed-point range")
+        arr = arr.astype(np.int64)
+        if scale == 1:
+            return arr
+        lim = (2 ** 63 - 1) // int(scale)
+        if len(arr) and (int(arr.max()) > lim or int(arr.min()) < -lim):
+            # the scalar oracle raised OverflowError converting the exact
+            # product to int64; wrapping silently would corrupt aggregates
+            raise OverflowError(
+                f"fixed-point product exceeds int64 at scale={scale}")
+        return arr * int(scale)
+    y = np.rint(arr * scale)
+    if not np.isfinite(y).all():
+        # stay as loud as the scalar oracle: int(round(x*s)) raises on
+        # NaN/inf (e.g. a float16 stream whose product overflows in the
+        # input dtype) — silently emitting int64-min garbage here would
+        # corrupt aggregates instead
+        if np.isnan(y).any():
+            raise ValueError("cannot quantize NaN values to fixed point")
+        raise OverflowError(
+            "fixed-point quantization overflowed the value dtype "
+            f"({arr.dtype} * scale={scale} is non-finite); widen the "
+            "tensor dtype or lower the precision")
+    if len(y) and (float(y.max()) >= 2.0 ** 63 or float(y.min()) < -2.0 ** 63):
+        # finite but beyond int64: astype would wrap where the scalar
+        # oracle's int() conversion raised
+        raise OverflowError(
+            f"fixed-point product exceeds int64 at scale={scale}")
+    return y.astype(np.int64)
+
+
+def quantize_values(values, scale) -> np.ndarray:
+    """``quantize_stream`` when the values pack into a numeric ndarray,
+    the scalar oracle otherwise (heterogeneous dict payloads, or a mixed
+    int/float list whose float64 coercion would silently round an exact
+    int above 2**53 that the scalar path kept exact)."""
+    if isinstance(values, np.ndarray):
+        arr = values
+    else:
+        values = list(values)
+        try:
+            arr = np.asarray(values)
+        except (TypeError, ValueError):
+            arr = None
+        if arr is not None and arr.dtype.kind == "f" \
+                and any(type(v) is int and abs(v) > 2 ** 53
+                        for v in values):
+            arr = None
+    if arr is not None and arr.dtype.kind in "biuf":
+        return quantize_stream(arr, scale)
+    return np.array(quantize_scalar_ref(values, scale), np.int64)
+
+
+# -- version-counted dicts (snapshot invalidation) ----------------------------
+
+class _VersionedDict(dict):
+    """dict that bumps ``.version`` on every mutation, so the sorted-array
+    lookup snapshots invalidate correctly even when tests poke entries
+    directly."""
+
+    __slots__ = ("version",)
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.version = 0
+
+    def __setitem__(self, k, v):
+        super().__setitem__(k, v)
+        self.version += 1
+
+    def __delitem__(self, k):
+        super().__delitem__(k)
+        self.version += 1
+
+    def pop(self, *a):
+        self.version += 1
+        return super().pop(*a)
+
+    def popitem(self):
+        self.version += 1
+        return super().popitem()
+
+    def clear(self):
+        self.version += 1
+        super().clear()
+
+    def update(self, *a, **kw):
+        self.version += 1
+        super().update(*a, **kw)
+
+    def setdefault(self, k, d=None):
+        self.version += 1
+        return super().setdefault(k, d)
+
+    def __ior__(self, other):
+        self.version += 1
+        return super().__ior__(other)
+
+
+class _SpillMap(_VersionedDict):
+    """_VersionedDict with ``defaultdict(int)`` read semantics (the
+    host-side spill map backing the vectorized ``read_batch`` snapshot);
+    the missing-key insert routes through the version-bumping
+    ``__setitem__``."""
+
+    def __missing__(self, k):
+        self[k] = 0
+        return 0
 
 
 @dataclass
@@ -92,31 +240,48 @@ class SwitchMemory:
     def _locate(self, phys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         return phys // self.seg_slots, phys % self.seg_slots
 
+    @staticmethod
+    def _seg_groups(seg_ix: np.ndarray):
+        """(segment, selector) pairs for a batch — a range scan between the
+        min and max touched segment instead of an O(n log n) np.unique
+        sort; a partition spans a handful of adjacent segments at most."""
+        mn, mx = int(seg_ix.min()), int(seg_ix.max())
+        if mn == mx:
+            yield mn, slice(None)
+            return
+        for s in range(mn, mx + 1):
+            m = seg_ix == s
+            if m.any():
+                yield s, m
+
     def addto(self, phys: np.ndarray, vals: np.ndarray) -> None:
         """Saturating scatter-add batches into the owning segments — one
         (bucketed) sparse_addto kernel launch per touched segment, however
         many RPC calls contributed to the batch."""
         seg_ix, off = self._locate(np.asarray(phys))
-        for s in np.unique(seg_ix):
-            m = seg_ix == s
-            seg = self.segments[int(s)]
+        if not len(seg_ix):
+            return
+        for s, m in self._seg_groups(seg_ix):
+            seg = self.segments[s]
             seg.regs = ops.sparse_addto_bucketed(
                 seg.regs, np.asarray(off[m], np.int32),
                 np.asarray(vals[m], np.int32))
 
     def get(self, phys: np.ndarray) -> np.ndarray:
-        seg_ix, off = self._locate(np.asarray(phys))
         out = np.zeros(len(phys), np.int32)
-        for s in np.unique(seg_ix):
-            m = seg_ix == s
-            out[m] = np.asarray(self.segments[int(s)].regs)[off[m]]
+        if not len(phys):
+            return out
+        seg_ix, off = self._locate(np.asarray(phys))
+        for s, m in self._seg_groups(seg_ix):
+            out[m] = np.asarray(self.segments[s].regs)[off[m]]
         return out
 
     def clear(self, phys: np.ndarray) -> None:
+        if not len(phys):
+            return
         seg_ix, off = self._locate(np.asarray(phys))
-        for s in np.unique(seg_ix):
-            m = seg_ix == s
-            seg = self.segments[int(s)]
+        for s, m in self._seg_groups(seg_ix):
+            seg = self.segments[s]
             if isinstance(seg.regs, np.ndarray):   # host-path register file
                 seg.regs[off[m]] = 0
             else:
@@ -143,11 +308,27 @@ class ServerAgent:
         self.window = window
         self.granted = switch.reserve(gaid, n_slots)
         self.base, self.capacity = (switch.partitions.get(gaid, (0, 0)))
-        self.mapping: dict[int, int] = {}      # logical -> physical
+        self.mapping: dict[int, int] = _VersionedDict()  # logical -> physical
         self.free: list[int] = list(range(self.capacity - 1, -1, -1))
-        self.spill: dict[int, int] = defaultdict(int)   # host-side values
-        self.window_counts: Counter = Counter()
+        self.spill: dict[int, int] = _SpillMap()        # host-side values
+        # per-window usage counters for the periodic LRU, accumulated as
+        # folded (keys, counts) array chunks in stream order; the legacy
+        # Counter view (``window_counts``) materializes lazily, preserving
+        # first-occurrence insertion order so most_common tie-breaks are
+        # unchanged
+        self._win_chunks: list[tuple[np.ndarray, np.ndarray]] = []
+        self._win_cache: Counter | None = None
+        # dense-window watermark: while every chunk is a 0-based contiguous
+        # index range (the GPV tensor regime), the window's distinct key
+        # set is just arange(max chunk length) and end_window can decide
+        # the no-op case in O(1)
+        self._win_dense_max = 0
+        self._win_mixed = False
         self.seen_this_window = 0
+        # lazily-rebuilt sorted-array snapshots for the vectorized lookup
+        self._map_snap = None
+        self._spill_snap = None
+        self._range_snap = None       # dense [0, L) -> slot lookup table
         # grants whose spilled value hasn't been migrated on-switch yet.
         # Reads stay exact while one is pending (read = spill + register and
         # the value sits in exactly one of the two); batching the migrations
@@ -159,38 +340,166 @@ class ServerAgent:
         self.inc_bytes = 0
         self.host_bytes = 0
 
+    # -- snapshot plumbing ------------------------------------------------
+
+    @property
+    def window_counts(self) -> Counter:
+        """Materialized per-window usage Counter (legacy view). Insertion
+        order matches the old eager ``Counter.update(stream)``: chunks are
+        appended in batch order and each chunk's keys are in
+        first-occurrence order, so most_common ties break identically."""
+        c = self._win_cache
+        if c is None:
+            c = Counter()
+            for k, n in self._win_chunks:
+                c.update(dict(zip(k.tolist(), n.tolist())))
+            self._win_cache = c
+        return c
+
+    def _note_window(self, keys: np.ndarray, counts: np.ndarray,
+                     total: int) -> None:
+        self._win_chunks.append((keys, counts))
+        self._win_cache = None
+        n = len(keys)
+        if n and not self._win_mixed:
+            if int(keys[0]) == 0 and int(keys[-1]) == n - 1 \
+                    and bool((np.diff(keys) == 1).all()):
+                self._win_dense_max = max(self._win_dense_max, n)
+            else:
+                self._win_mixed = True
+        self.seen_this_window += total
+
+    def _clear_window(self) -> None:
+        self._win_chunks = []
+        self._win_cache = None
+        self._win_dense_max = 0
+        self._win_mixed = False
+        self.seen_this_window = 0
+
+    def _map_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """(sorted logical keys, aligned physical slots) snapshot of the
+        mapping; rebuilt only when the mapping's version moved."""
+        snap = self._map_snap
+        if snap is None or snap[0] != self.mapping.version:
+            if self.mapping:
+                keys = np.fromiter(self.mapping.keys(), np.int64,
+                                   len(self.mapping))
+                slots = np.fromiter(self.mapping.values(), np.int64,
+                                    len(self.mapping))
+                order = np.argsort(keys, kind="stable")
+                keys, slots = keys[order], slots[order]
+            else:
+                keys = slots = np.zeros(0, np.int64)
+            snap = self._map_snap = (self.mapping.version, keys, slots)
+        return snap[1], snap[2]
+
+    def _spill_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        snap = self._spill_snap
+        if snap is None or snap[0] != self.spill.version:
+            if self.spill:
+                keys = np.fromiter(self.spill.keys(), np.int64,
+                                   len(self.spill))
+                vals = np.fromiter(self.spill.values(), np.int64,
+                                   len(self.spill))
+                order = np.argsort(keys, kind="stable")
+                keys, vals = keys[order], vals[order]
+            else:
+                keys = vals = np.zeros(0, np.int64)
+            snap = self._spill_snap = (self.spill.version, keys, vals)
+        return snap[1], snap[2]
+
+    def _range_table(self, n: int) -> np.ndarray:
+        """slot-or-minus-one lookup table over logical addresses [0, n) —
+        the O(1)-per-element dense path (tensor indices ARE their own
+        address, so a GPV batch's lookup is one fancy index instead of a
+        searchsorted)."""
+        snap = self._range_snap
+        if snap is None or snap[0] != self.mapping.version or snap[1] < n:
+            keys, slots = self._map_arrays()
+            size = max(n, snap[1] if snap is not None else 0)
+            tab = np.full(size, -1, np.int64)
+            if len(keys):
+                cut = int(np.searchsorted(keys, size))
+                tab[keys[:cut]] = slots[:cut]
+            snap = self._range_snap = (self.mapping.version, size, tab)
+        return snap[2]
+
+    def _map_lookup(self, q: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(hit mask, candidate slots) for an int64 logical-address batch —
+        ONE searchsorted over the mapping snapshot (or one table index for
+        a dense 0-based range), no per-key Python."""
+        n = len(q)
+        if n > 1 and int(q[0]) == 0 and int(q[-1]) == n - 1 \
+                and bool((np.diff(q) == 1).all()):
+            slotv = self._range_table(n)[:n]       # q == arange(n)
+            return slotv >= 0, slotv
+        keys, slots = self._map_arrays()
+        if not len(keys):
+            return np.zeros(n, bool), slots
+        ix = np.minimum(np.searchsorted(keys, q), len(keys) - 1)
+        return keys[ix] == q, slots[ix]
+
     # -- data path ------------------------------------------------------
 
     def addto_batch(self, logical: np.ndarray, vals: np.ndarray) -> None:
-        """Route a batch of (logical addr, value) updates: INC or host."""
+        """Route a batch of (logical addr, value) updates: INC or host.
+        Fully vectorized: one mapping lookup, one switch kernel batch for
+        the hits, one folded spill/stats update for the misses, one folded
+        usage chunk for the LRU window."""
         logical = np.asarray(logical, np.uint32)
         vals = np.asarray(vals, np.int64)
-        logs = logical.tolist()
-        mapped = [l in self.mapping for l in logs]
-        n_hit = sum(mapped)
+        n = len(logical)
+        if n == 0:
+            return
+        q = logical.astype(np.int64)
+        hit, slotv = self._map_lookup(q)
+        n_hit = int(hit.sum())
         # INC path
         if n_hit:
-            mask = np.array(mapped)
-            phys = np.array([self.mapping[l]
-                             for l, m in zip(logs, mapped) if m])
-            self.switch.addto(self.base + phys, vals[mask].astype(np.int32))
+            if n_hit == n:
+                phys, v32 = self.base + slotv, vals.astype(np.int32)
+            else:
+                phys, v32 = self.base + slotv[hit], vals[hit].astype(np.int32)
+            self.switch.addto(phys, v32)
             self.hits += n_hit
             self.inc_bytes += n_hit * 8
-        # host path (miss): server agent software map + maybe grant mapping
-        if n_hit < len(logs):
-            for l, m, v in zip(logs, mapped, vals.tolist()):
-                if m:
-                    continue
-                self.spill[l] += v
-                self.misses += 1
-                self.host_bytes += 8
+        # host path (miss): server agent software map + maybe grant mapping.
+        # Duplicates fold to one spill write and one grant probe per key —
+        # behavior-identical to the per-occurrence loop because the window
+        # counters only advance after this batch, so every occurrence saw
+        # the same grant decision anyway.
+        if n_hit < n:
+            miss = ~hit
+            n_miss = n - n_hit
+            keys_f, _, sums_f = ops.fold_stream_host(logical[miss],
+                                                     vals[miss])
+            self.misses += n_miss
+            self.host_bytes += 8 * n_miss
+            spill = self.spill
+            for l, v in zip(keys_f.tolist(), sums_f.tolist()):
+                spill[l] += v
                 self._maybe_grant(l)
         # usage accounting for the periodic LRU
-        self.window_counts.update(logs)
-        self.seen_this_window += len(logs)
+        wkeys, wcnt, _ = ops.fold_stream_host(logical)
+        self._note_window(wkeys, wcnt, n)
         if self.seen_this_window >= self.window:
             self.end_window()
         self._flush_migrations()
+
+    def spill_host(self, pairs: list[tuple[int, int]]) -> None:
+        """Batched host-path fold for collision-routed (logical, delta)
+        pairs: ONE stats update + one folded spill write per flush instead
+        of a Python loop per item (the host path of _MapOpBuffer.flush and
+        ClientAgent.addto)."""
+        if not pairs:
+            return
+        self.host_bytes += 8 * len(pairs)
+        folded: Counter = Counter()
+        for l, v in pairs:
+            folded[l] += v
+        spill = self.spill
+        for l, v in folded.items():
+            spill[l] += v
 
     def read(self, logical: int) -> int:
         """Map.get: switch register (if mapped) + host spill."""
@@ -198,24 +507,34 @@ class ServerAgent:
 
     def read_batch(self, logical: np.ndarray) -> np.ndarray:
         """Batched Map.get: ONE switch gather for all mapped addresses plus
-        the host-spill components — the data-plane read of call_batch."""
+        the host-spill components — the data-plane read of call_batch.
+        Spill and mapping lookups are searchsorted over the sorted-array
+        snapshots (no per-key dict probes)."""
         logical = np.asarray(logical, np.uint32)
-        out = np.array([self.spill.get(int(l), 0) for l in logical], np.int64)
-        mapped_ix = [i for i, l in enumerate(logical)
-                     if int(l) in self.mapping]
-        if mapped_ix:
-            phys = self.base + np.array(
-                [self.mapping[int(logical[i])] for i in mapped_ix])
-            out[mapped_ix] += self.switch.get(phys).astype(np.int64)
+        n = len(logical)
+        out = np.zeros(n, np.int64)
+        if n == 0:
+            return out
+        q = logical.astype(np.int64)
+        if self.spill:
+            skeys, svals = self._spill_arrays()
+            ix = np.minimum(np.searchsorted(skeys, q), len(skeys) - 1)
+            shit = skeys[ix] == q
+            if shit.any():
+                out[shit] = svals[ix[shit]]
+        if self.mapping:
+            hit, slotv = self._map_lookup(q)
+            if hit.any():
+                out[hit] += self.switch.get(
+                    self.base + slotv[hit]).astype(np.int64)
         return out
 
     def read_all(self) -> dict[int, int]:
         out = dict(self.spill)
         if self.mapping:
-            logs = list(self.mapping)
-            phys = self.base + np.array([self.mapping[l] for l in logs])
-            vals = self.switch.get(phys)
-            for l, v in zip(logs, vals):
+            keys, slots = self._map_arrays()
+            vals = self.switch.get(self.base + slots)
+            for l, v in zip(keys.tolist(), vals.tolist()):
                 out[l] = out.get(l, 0) + int(v)
         return out
 
@@ -270,36 +589,63 @@ class ServerAgent:
 
     def end_window(self) -> None:
         """Periodic counting-based LRU (§5.2.2): clients report per-window
-        use counts; the agent evicts mapped keys colder than unmapped ones."""
+        use counts; the agent evicts mapped keys colder than unmapped ones.
+
+        Fast path for the steady dense-tensor regime: when the window's
+        distinct keys fit the capacity (no most_common truncation) and no
+        mapped key went cold, the whole window is a no-op — decided with
+        two C-level set operations on the array chunks instead of a sort +
+        Python scan over every counter."""
         self._flush_migrations()
         if self.policy == "netrpc-lru" and self.capacity:
-            hot = [l for l, _ in self.window_counts.most_common(self.capacity)]
-            hot_set = set(hot)
-            evict = [l for l in self.mapping if l not in hot_set]
-            want = [l for l in hot if l not in self.mapping]
-            for l in evict:
-                if not want:
-                    break
-                slot = self.mapping.pop(l)
-                # retrieve the register value into the host map (no loss)
-                v = int(self.switch.get(np.array([self.base + slot]))[0])
-                if v:
-                    self.spill[l] += v
-                self.switch.clear(np.array([self.base + slot]))
-                self._install(want.pop(0), slot)
-        self.window_counts.clear()
-        self.seen_this_window = 0
+            noop = False
+            if self._win_chunks and not self._win_mixed:
+                # dense regime: window keys == arange(watermark), so the
+                # no-op test is two scalar compares
+                w = self._win_dense_max
+                if w <= self.capacity:
+                    mkeys, _ = self._map_arrays()
+                    noop = len(mkeys) == 0 or int(mkeys[-1]) < w
+            elif self._win_chunks:
+                wkeys = np.unique(np.concatenate(
+                    [k.astype(np.int64) for k, _ in self._win_chunks]))
+                if len(wkeys) <= self.capacity:
+                    mkeys, _ = self._map_arrays()
+                    noop = len(np.setdiff1d(mkeys, wkeys,
+                                            assume_unique=True)) == 0
+            if not noop:
+                counts = self.window_counts
+                hot = [l for l, _ in counts.most_common(self.capacity)]
+                hot_set = set(hot)
+                evict = [l for l in self.mapping if l not in hot_set]
+                want = [l for l in hot if l not in self.mapping]
+                for l in evict:
+                    if not want:
+                        break
+                    slot = self.mapping.pop(l)
+                    # retrieve the register value into the host map (no loss)
+                    v = int(self.switch.get(np.array([self.base + slot]))[0])
+                    if v:
+                        self.spill[l] += v
+                    self.switch.clear(np.array([self.base + slot]))
+                    self._install(want.pop(0), slot)
+        self._clear_window()
         self._flush_migrations()
 
     def retrieve_all(self) -> None:
         """Pull every mapped register value into the host-side map (the
-        level-1 timeout retrieval of §5.2.2, also used at graceful stop)."""
+        level-1 timeout retrieval of §5.2.2, also used at graceful stop):
+        one switch gather + one clear for the whole mapping."""
         self._flush_migrations()
-        for logical, slot in list(self.mapping.items()):
-            v = int(self.switch.get(np.array([self.base + slot]))[0])
-            if v:
-                self.spill[logical] += v
-            self.switch.clear(np.array([self.base + slot]))
+        if self.mapping:
+            keys, slots = self._map_arrays()
+            phys = self.base + slots
+            vals = self.switch.get(phys).astype(np.int64)
+            nz = vals != 0
+            spill = self.spill
+            for l, v in zip(keys[nz].tolist(), vals[nz].tolist()):
+                spill[l] += v
+            self.switch.clear(phys)
         self.mapping.clear()
         self.free = list(range(self.capacity - 1, -1, -1))
 
@@ -318,6 +664,15 @@ class ClientAgent:
     collisions among them and route colliding keys via the host payload
     path (bypassing INC) — handled here by tracking a canonical key per
     logical address.
+
+    Dense tensor indices (the GPV fast path) resolve through a cached
+    arange table: index ``i`` hashes to logical address ``i`` (identity),
+    so the table is valid for every index not claimed earlier by a
+    *foreign* key (a key whose hash is not itself — strings, bytes,
+    ints >= 2**32). Foreign claims are tracked as they happen, so
+    extending the table to a larger tensor never scans ``key_of``; and
+    once an index is canonical it stays canonical (ownership is
+    first-writer-wins and permanent), so the table never invalidates.
     """
 
     def __init__(self, server: ServerAgent):
@@ -325,6 +680,13 @@ class ClientAgent:
         self.key_of: dict[int, str | bytes | int] = {}
         self.collisions: dict[str | bytes | int, int] = {}
         self._addr: dict = {}          # key -> logical (or None): memoized
+        # GPV dense-index table: indices [0, _dense_n) own their address
+        # unless listed in _dense_coll (claimed first by a foreign key)
+        self._dense_n = 0
+        self._dense_log = np.zeros(0, np.uint32)
+        self._dense_coll: list[int] = []
+        self._dense_coll_arr = np.zeros(0, np.int64)
+        self._foreign: dict[int, None] = {}   # addrs owned by foreign keys
 
     def logical(self, key) -> int | None:
         """Returns the logical address, or None if the key must bypass INC.
@@ -340,43 +702,86 @@ class ClientAgent:
             l = None
         else:
             l = hash_key(key)
+            if key != l and l < self._dense_n:
+                # a dense tensor index claimed this address first
+                self.collisions[key] = l
+                self._addr[key] = None
+                return None
             owner = self.key_of.setdefault(l, key)
             if owner != key:
                 self.collisions[key] = l
                 l = None
+            elif key != l:
+                self._foreign[l] = None
         self._addr[key] = l
         return l
+
+    def _ensure_dense(self, n: int) -> None:
+        if n <= self._dense_n:
+            return
+        if len(self._dense_log) < n:
+            self._dense_log = np.arange(max(n, 2 * len(self._dense_log)),
+                                        dtype=np.uint32)
+        if self._foreign:
+            new = sorted(a for a in self._foreign
+                         if self._dense_n <= a < n)
+            if new:
+                self._dense_coll = sorted(self._dense_coll + new)
+                self._dense_coll_arr = np.array(self._dense_coll, np.int64)
+        self._dense_n = n
+
+    def dense_addrs(self, n: int) -> np.ndarray:
+        """Logical addresses of dense indices 0..n-1: one cached-arange
+        slice (the Map.get address vector of a GPV tensor reply)."""
+        self._ensure_dense(n)
+        return self._dense_log[:n]
+
+    def resolve_dense(self, n: int, qvals: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray,
+                                 list[tuple[int, int]]]:
+        """Dense index -> address resolution for a GPV tensor segment:
+        returns (logical addrs, fixed-point values, collision host-path
+        pairs) without touching a per-key Python loop. Element-exact vs
+        ``resolve({i: v_i}, p)`` over the same quantized values."""
+        self._ensure_dense(n)
+        logs = self._dense_log[:n]
+        qvals = np.asarray(qvals, np.int64)
+        coll = self._dense_coll_arr
+        if len(coll) and coll[0] < n:       # collision host path (rare)
+            m = coll[coll < n]
+            spills = list(zip(m.tolist(), qvals[m].tolist()))
+            keep = np.ones(n, bool)
+            keep[m] = False
+            return logs[keep], qvals[keep], spills
+        return logs, qvals, []
 
     def resolve(self, kv: dict, precision: int = 0
                 ) -> tuple[np.ndarray, np.ndarray, list[tuple[int, int]]]:
         """Key -> logical-address resolution without touching the server:
         returns (logical addrs, fixed-point values, collision host-path
         pairs). The batched pipeline buffers these and flushes many calls'
-        worth in one addto_batch."""
+        worth in one addto_batch. Values quantize in one vectorized pass
+        (quantize_stream) when the dict is numerically homogeneous."""
         scale = 10 ** precision
         logs = [self.logical(k) for k in kv]
-        if scale == 1:
-            vals = [v if type(v) is int else int(round(v))
-                    for v in kv.values()]
-        else:
-            vals = [int(round(v * scale)) for v in kv.values()]
+        vals = quantize_values(list(kv.values()), scale)
         spills = []
         if None in logs:                    # collision host path (rare)
             keep_l, keep_v = [], []
-            for k, l, iv in zip(kv, logs, vals):
+            for k, l, iv in zip(kv, logs, vals.tolist()):
                 if l is None:
                     spills.append((hash_key(k), iv))
                 else:
                     keep_l.append(l)
                     keep_v.append(iv)
-            logs, vals = keep_l, keep_v
-        return (np.array(logs, np.uint32), np.array(vals, np.int64), spills)
+            return (np.array(keep_l, np.uint32),
+                    np.array(keep_v, np.int64), spills)
+        return (np.array(logs, np.uint32), np.asarray(vals, np.int64),
+                spills)
 
     def addto(self, kv: dict, precision: int = 0) -> None:
         logs, vals, spills = self.resolve(kv, precision)
-        for l, iv in spills:
-            self.server.spill[l] += iv
-            self.server.host_bytes += 8
+        self.server.spill_host(spills)
         if len(logs):
             self.server.addto_batch(logs, vals)
 

@@ -56,6 +56,21 @@ addTo may still be buffered when its handler runs) — nested RPC calls are
 fine: a nested pipeline pass flushes the enclosing pass's buffer on entry
 (``Channel.active_buf``), so it observes everything issued before it.
 
+GPV wire path (array-native tensors). Tensor-shaped request fields (an
+ndarray/list where the INC stream's keys are just the flat element
+indices) never become per-element Python dicts: ``_stream_items`` wraps
+them in a ``TensorSegment`` that carries the raw ndarray, quantization is
+one vectorized ``np.rint`` (element-exact vs the scalar
+``int(round(x * s))`` oracle), address resolution is a cached arange
+lookup in the ClientAgent, Map.addTo/Map.get ride the vectorized
+ServerAgent batch paths, and the reply dequantizes in one op. Schema-bound
+stubs (core/schema.py) return FPArray/IntArray Map.get replies as
+ndarrays shaped like the request; stubs built from a legacy ``Service``
+keep the historical ``{index: value}`` dict replies, and map-typed
+(STRINTMap) fields are dicts everywhere. ``set_gpv(False)`` (or
+``REPRO_GPV=0``) forces the per-element dict path — kept as the semantic
+reference and the baseline leg of benchmarks/wire_path.py.
+
 This module is deliberately framework-level (host-side, numpy): the
 device-resident SyncAgtr fast path is core/inc_agg.py; examples/paxos.py,
 examples/mapreduce.py and examples/monitoring.py build the paper's three
@@ -63,6 +78,7 @@ other app types on this layer with ~20 lines each.
 """
 from __future__ import annotations
 
+import os
 import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -71,7 +87,7 @@ import numpy as np
 
 from repro.core.channel import Channel, Controller
 from repro.core.clear_policy import POLICIES
-from repro.core.inc_map import hash_key
+from repro.core.inc_map import hash_key, quantize_values
 from repro.core.netfilter import NetFilter
 from repro.kernels import ref
 
@@ -130,15 +146,76 @@ class Server:
 
 # -- the batched RIP pipeline ------------------------------------------------
 
-def _stream_items(request: dict, msg_field: str) -> dict:
-    """"Message.field" -> items of that request field."""
+_GPV = [os.environ.get("REPRO_GPV", "1") != "0"]
+
+
+def gpv_enabled() -> bool:
+    return _GPV[0]
+
+
+def set_gpv(enabled: bool) -> bool:
+    """Enable/disable the array-native GPV wire path; returns the previous
+    setting. With GPV off every tensor-shaped field is marshalled through
+    the per-element dict path — the semantic reference, and the baseline
+    leg of benchmarks/wire_path.py."""
+    prev = _GPV[0]
+    _GPV[0] = bool(enabled)
+    return prev
+
+
+@dataclass
+class TensorSegment:
+    """Array-native GPV segment: one tensor-shaped request field carried
+    as contiguous ndarrays end-to-end — plan -> Stream.modify -> address
+    resolution -> Map.addTo -> Map.get/clear -> dequantize — without ever
+    materializing a per-element dict. Elements are addressed by their flat
+    index (identity hash, see ClientAgent.resolve_dense); values travel as
+    int64 fixed point once ``quantize`` runs."""
+
+    data: np.ndarray                  # raveled request values, input dtype
+    shape: tuple[int, ...]            # original field shape (reply shape)
+    qvals: np.ndarray | None = None   # int64 fixed-point (phase 1/2)
+
+    def __len__(self) -> int:
+        return self.data.shape[0]
+
+    def quantize(self, scale) -> None:
+        if self.qvals is None:
+            self.qvals = quantize_values(self.data, scale)
+
+
+def _int32_checked(q: np.ndarray) -> np.ndarray:
+    """Narrow quantized modify inputs to int32, raising (like the replaced
+    ``np.array(py_ints, np.int32)`` did) instead of silently wrapping a
+    value outside the fixed-point register range."""
+    if len(q) and (int(q.max()) > 2 ** 31 - 1 or int(q.min()) < -2 ** 31):
+        raise OverflowError(
+            "quantized Stream.modify values exceed the int32 fixed-point "
+            "range; lower the NetFilter precision")
+    return q.astype(np.int32)
+
+
+def _stream_items(request: dict, msg_field: str) -> "dict | TensorSegment":
+    """``"Message.field"`` -> the items of that request field.
+
+    Fast path (GPV): non-dict values that convert to a numeric ndarray of
+    rank >= 1 (ndarrays, lists/tuples of numbers, jax arrays) become a
+    :class:`TensorSegment` and stay arrays through the whole pipeline.
+    Dict path: dict values (explicit key -> value maps), scalars, and
+    non-numeric payloads are marshalled per element as ``{key: value}``,
+    exactly as before the GPV path existed (also forced for everything by
+    ``set_gpv(False)``).
+    """
     fname = msg_field.split(".")[-1]
     v = request.get(fname)
     if v is None:
         return {}
     if isinstance(v, dict):
         return v
-    return {i: x for i, x in enumerate(np.asarray(v).ravel())}
+    arr = np.asarray(v)
+    if _GPV[0] and arr.ndim >= 1 and arr.dtype.kind in "biuf":
+        return TensorSegment(data=arr.reshape(-1), shape=arr.shape)
+    return {i: x for i, x in enumerate(arr.ravel())}
 
 
 @dataclass
@@ -147,7 +224,8 @@ class _PlannedCall:
     agent: Any                                  # ClientAgent of the stub
     md: Method
     request: dict
-    items: dict = field(default_factory=dict)   # post-modify addTo items
+    array_reply: bool = False                   # ndarray Map.get reply ok
+    items: "dict | TensorSegment" = field(default_factory=dict)
     logs: np.ndarray | None = None              # resolved logical addrs
     vals: np.ndarray | None = None
     spills: list = field(default_factory=list)  # collision host-path pairs
@@ -193,9 +271,9 @@ class _MapOpBuffer:
 
     def flush(self) -> None:
         if self._spills:
-            for l, v in self._spills:
-                self.server.spill[l] += v
-                self.server.host_bytes += 8
+            # one folded spill/stats update for the whole flush, not a
+            # Python loop per collision item
+            self.server.spill_host(self._spills)
             self._spills = []
         if self._extra:
             # counter addresses are disjoint from data keys, so appending
@@ -243,6 +321,9 @@ def _run_pipeline(channel: Channel, host_server: Server,
     for c in calls:
         c.items = (_stream_items(c.request, c.nf.add_to)
                    if c.nf.add_to != "nop" else {})
+        if isinstance(c.items, TensorSegment):
+            channel.stats.gpv_calls += 1
+            channel.stats.gpv_elems += len(c.items)
     groups: dict[tuple[str, int], list[int]] = {}
     for i, c in enumerate(calls):
         if c.items and c.nf.modify.op != "nop":
@@ -250,24 +331,40 @@ def _run_pipeline(channel: Channel, host_server: Server,
     for (op, para), ixs in groups.items():
         scaled = []
         for i in ixs:
-            s = 10 ** calls[i].nf.precision
-            scaled.append(np.array(
-                [int(round(x * s)) for x in calls[i].items.values()],
-                np.int32))
+            c = calls[i]
+            s = 10 ** c.nf.precision
+            if isinstance(c.items, TensorSegment):
+                c.items.quantize(s)
+                scaled.append(_int32_checked(c.items.qvals))
+            else:
+                scaled.append(_int32_checked(
+                    quantize_values(list(c.items.values()), s)))
         fused = np.asarray(ref.stream_modify(np.concatenate(scaled), op,
                                              para), np.int64)
         pos = 0
         for i, seg in zip(ixs, scaled):
-            s = 10 ** calls[i].nf.precision
-            calls[i].items = dict(zip(calls[i].items.keys(),
-                                      fused[pos:pos + len(seg)] / s))
+            c = calls[i]
+            out = fused[pos:pos + len(seg)]
+            if isinstance(c.items, TensorSegment):
+                # stays fixed point: the dict path's dequantize->requantize
+                # round trip is the identity for int32-range values
+                # (pinned by tests/test_wire_path.py)
+                c.items.qvals = out
+            else:
+                s = 10 ** c.nf.precision
+                c.items = dict(zip(c.items.keys(), out / s))
             pos += len(seg)
 
     # ---- phase 2: client-side logical-address resolution --------------------
     for c in calls:
         if c.items:
-            c.logs, c.vals, c.spills = c.agent.resolve(c.items,
-                                                       c.nf.precision)
+            if isinstance(c.items, TensorSegment):
+                c.items.quantize(10 ** c.nf.precision)
+                c.logs, c.vals, c.spills = c.agent.resolve_dense(
+                    len(c.items), c.items.qvals)
+            else:
+                c.logs, c.vals, c.spills = c.agent.resolve(c.items,
+                                                           c.nf.precision)
 
     # ---- phase 3: CntFwd gating (simulated over pre-batch counters) ---------
     # Counter keys are disjoint from data keys, so the per-tag count at any
@@ -323,17 +420,31 @@ def _run_pipeline(channel: Channel, host_server: Server,
             if c.nf.get != "nop" and c.forwarded:
                 buf.flush()      # this get must observe every earlier addTo
                 fname = c.nf.get.split(".")[-1]
-                if c.nf.add_to != "nop":
-                    keys = list(c.items.keys())
-                else:
-                    keys = list(c.request.get(fname, {}).keys()) or \
-                        list(server.spill.keys())
-                logs = np.array([hash_key(k) for k in keys], np.uint32)
-                raw = (server.read_batch(logs) if len(logs)
-                       else np.zeros(0, np.int64))
                 scale = 10 ** c.nf.precision
-                c.reply[fname] = {k: int(r) / scale
-                                  for k, r in zip(keys, raw)}
+                if isinstance(c.items, TensorSegment):
+                    # GPV reply: one address-table slice, one gather, one
+                    # vectorized dequantize. Schema-bound stubs take the
+                    # ndarray (request-shaped); legacy stubs keep the
+                    # historical {index: value} dict.
+                    seg = c.items
+                    logs = c.agent.dense_addrs(len(seg))
+                    raw = server.read_batch(logs)
+                    vals = raw / scale
+                    c.reply[fname] = (vals.reshape(seg.shape)
+                                      if c.array_reply else
+                                      dict(zip(range(len(seg)),
+                                               vals.tolist())))
+                else:
+                    if c.nf.add_to != "nop":
+                        keys = list(c.items.keys())
+                    else:
+                        keys = list(c.request.get(fname, {}).keys()) or \
+                            list(server.spill.keys())
+                    logs = np.array([hash_key(k) for k in keys], np.uint32)
+                    raw = (server.read_batch(logs) if len(logs)
+                           else np.zeros(0, np.int64))
+                    c.reply[fname] = {k: int(r) / scale
+                                      for k, r in zip(keys, raw)}
                 if c.nf.clear in POLICIES:
                     # copy: values are already backed up server-side (the
                     # read above); shadow/lazy semantics are exercised on
@@ -360,11 +471,27 @@ def _run_pipeline(channel: Channel, host_server: Server,
 
 # -- client stub -------------------------------------------------------------
 
+def _array_get_field(md: Method) -> bool:
+    """True when the method's Map.get target is an array-typed IEDT reply
+    field (FPArray/IntArray) — eligible for ndarray-shaped GPV replies."""
+    if md.netfilter.get == "nop":
+        return False
+    fname = md.netfilter.get.split(".")[-1]
+    return any(f.name == fname and f.iedt in ("FPArray", "IntArray")
+               for f in md.reply)
+
+
 class Stub:
     """The string-keyed client stub — the compatibility surface under the
     typed schema layer (core/schema.py compiles declarative service
     classes down to this + NetFilter; `make_stub` on a schema class
-    returns a generated TypedStub wrapping one of these)."""
+    returns a generated TypedStub wrapping one of these).
+
+    ``reply_arrays`` stays False here, so a stub built from a legacy
+    ``Service`` keeps the historical ``{index: value}`` dict replies even
+    for ndarray requests; the schema layer flips it on bind, giving typed
+    stubs (and their ``.legacy`` escape hatch) ndarray-shaped
+    FPArray/IntArray Map.get replies on the GPV path."""
 
     def __init__(self, service: Service, channels: dict[str, Channel],
                  server: Server, runtime: "NetRPC"):
@@ -373,10 +500,15 @@ class Stub:
         self.server = server
         self.runtime = runtime            # owning NetRPC / IncRuntime
         self.agents = {m: ch.client() for m, ch in channels.items()}
+        self.reply_arrays = False
+        self._array_ok = {m: _array_get_field(md)
+                          for m, md in service.methods.items()}
 
     def _plan(self, method: str, request: dict) -> _PlannedCall:
         return _PlannedCall(agent=self.agents[method],
-                            md=self.service.methods[method], request=request)
+                            md=self.service.methods[method], request=request,
+                            array_reply=(self.reply_arrays
+                                         and self._array_ok[method]))
 
     def call(self, method: str, request: dict) -> dict:
         return self.call_batch(method, [request])[0]

@@ -390,6 +390,8 @@ class IncRuntime(NetRPC):
                     "drained_batches": st.drained_batches,
                     "mean_drained_batch": round(st.mean_drained_batch, 2),
                     "admission_waits": st.admission_waits,
+                    "gpv_calls": st.gpv_calls,
+                    "gpv_elems": st.gpv_elems,
                 }
         return out
 

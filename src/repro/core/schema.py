@@ -259,6 +259,12 @@ class ServiceSchema:
     channel_policies: dict[str, Any] = field(default_factory=dict)
 
     def bind(self, stub: Stub) -> "TypedStub":
+        # typed surface opts into the GPV wire format: FPArray/IntArray
+        # Map.get replies come back as ndarrays (request-shaped) when the
+        # request field was array-shaped; map-typed fields stay dicts.
+        # Stubs built from a legacy Service never set this, so the
+        # string-keyed compat surface keeps its {index: value} dicts.
+        stub.reply_arrays = True
         return TypedStub(self, stub)
 
 

@@ -157,6 +157,47 @@ def sat_add_batch(acc: jax.Array, qs: jax.Array,
     return _sat_add_batch_tpu(acc, qs, block_rows=block_rows)
 
 
+def fold_stream_host(logical: np.ndarray, vals: np.ndarray | None = None
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+    """Fold a duplicate-keyed update stream into per-key aggregates.
+
+    Returns ``(keys, counts, sums)`` where ``keys`` holds each distinct
+    address in FIRST-OCCURRENCE order (the order ``Counter.update(stream)``
+    would insert them — the INC-map LRU breaks most_common ties by that
+    insertion order, so the fold must preserve it), ``counts`` the number
+    of occurrences, and ``sums`` the per-key value totals (``None`` when
+    ``vals`` is ``None``).  This is the host-side GPV fold: one C-level
+    pass over however many RPC calls contributed to the flush, replacing
+    the per-element Python loops of the dict data plane.
+
+    Already-strictly-increasing streams (the dense tensor-index case) skip
+    the sort entirely.
+    """
+    logical = np.asarray(logical)
+    n = len(logical)
+    if n == 0:
+        empty = np.zeros(0, logical.dtype if logical.dtype.kind in "iu"
+                         else np.int64)
+        return empty, np.zeros(0, np.int64), \
+            (np.zeros(0, np.int64) if vals is not None else None)
+    if vals is not None:
+        vals = np.asarray(vals, np.int64)
+    if n == 1 or bool((np.diff(logical.astype(np.int64)) > 0).all()):
+        # strictly increasing => already unique and "first-occurrence"
+        # ordered; dense tensor addresses land here every call
+        return logical, np.ones(n, np.int64), vals
+    uniq, first, inv, cnt = np.unique(logical, return_index=True,
+                                      return_inverse=True,
+                                      return_counts=True)
+    order = np.argsort(first, kind="stable")
+    sums = None
+    if vals is not None:
+        sums = np.zeros(len(uniq), np.int64)
+        np.add.at(sums, inv, vals)
+        sums = sums[order]
+    return uniq[order], cnt[order].astype(np.int64), sums
+
+
 def _sat_add_scalar(a: int, b: int) -> int:
     """Exact scalar ref.sat_add: sticky sentinels (a's wins), then the
     wrapped-add overflow reconstruction on the true integer sum."""
@@ -189,6 +230,17 @@ def sparse_addto_host(regs: np.ndarray, idx: np.ndarray,
     idx = np.asarray(idx, np.int64)
     val = np.asarray(val, np.int64)
     if len(idx) == 0:
+        return regs
+    if len(idx) == 1 or bool((np.diff(idx) > 0).all()):
+        # strictly increasing => every slot gets exactly ONE update, so the
+        # sequential order is vacuous: no unique/searchsorted/segment-sum,
+        # just a masked saturating add (the dense GPV flush lands here)
+        cur = regs[idx].astype(np.int64)
+        safe = np.abs(cur) + np.abs(val) <= SAT_MAX
+        new = cur + np.where(safe, val, 0)
+        for i in np.nonzero(~safe)[0]:
+            new[i] = _sat_add_scalar(int(cur[i]), int(val[i]))
+        regs[idx] = new.astype(np.int32)
         return regs
     touched = np.unique(idx)
     pos = np.searchsorted(touched, idx)     # update -> touched-slot index
