@@ -1,7 +1,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast examples bench-batch bench-async bench-wire
+.PHONY: test test-fast examples bench-batch bench-async bench-wire \
+	bench-shard
 
 # full tier-1 suite (includes the slow multidevice subprocess tests)
 test:
@@ -29,3 +30,7 @@ bench-async:
 # GPV wire-path sweep: tensor marshalling calls/sec, dict path vs array path
 bench-wire:
 	python benchmarks/wire_path.py --csv
+
+# sharded-plane sweep: M channels x workers in {1,2,4}, weighted fairness
+bench-shard:
+	python benchmarks/multi_channel.py --csv

@@ -1,11 +1,33 @@
 """Shared benchmark helpers."""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 
 from repro import compat
+
+
+def write_bench_json(name: str, config: dict, rows: list,
+                     acceptance: dict | None = None) -> Path:
+    """Machine-readable perf-trajectory export: ``BENCH_<name>.json``
+    next to results.csv, holding the run's config, every metric row, and
+    the acceptance verdicts — diffable across PRs (results.csv only
+    appends). scripts/ci.sh asserts these files parse.
+
+    ``rows`` are the benchmark's usual ``(metric, value, note)`` tuples.
+    """
+    payload = {
+        "bench": name,
+        "config": config,
+        "rows": [{"metric": m, "value": v, "note": n} for m, v, n in rows],
+        "acceptance": acceptance or {},
+    }
+    out = Path(__file__).resolve().parent / f"BENCH_{name}.json"
+    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return out
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:

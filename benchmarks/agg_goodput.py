@@ -164,7 +164,11 @@ def run_batch(batch_sizes=(1, 4, 16, 64), n_calls: int = 256,
                      round(dt / n_calls * 1e6, 1),
                      f"calls_per_sec={cps:.0f}"
                      f" speedup_vs_bs1={cps / base_cps:.2f}x"))
-    return rows
+        last_speedup = cps / base_cps
+    acceptance = {"speedup_at_max_bs": round(last_speedup, 2),
+                  "max_bs": batch_sizes[-1], "target": 5.0,
+                  "verdict": "PASS" if last_speedup >= 5.0 else "FAIL"}
+    return rows, acceptance
 
 
 def _chunks(seq, n):
@@ -178,7 +182,13 @@ def main() -> None:
     ap.add_argument("--batch", action="store_true",
                     help="run the batched-RPC calls/sec sweep")
     args = ap.parse_args()
-    for row in (run_batch() if args.batch else run()):
+    if args.batch:
+        rows, acceptance = run_batch()
+        from benchmarks._util import write_bench_json
+        write_bench_json("agg_batch", {"sweep": "batch"}, rows, acceptance)
+    else:
+        rows = run()
+    for row in rows:
         print(",".join(str(x) for x in row))
 
 

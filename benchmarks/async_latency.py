@@ -271,7 +271,14 @@ def run(n_calls: int = 2048, repeats: int = 5) -> list:
                  f" median_auto_vs_explicit={best}:{ratio[best]:.2f}"
                  f" batch_async_vs_explicit={ratio['abatch']:.2f}"
                  f"{baseline_note}"))
-    return rows
+    acceptance = {
+        "verdict": verdict,
+        "modes_meeting_both": list(passing),
+        "median_auto_vs_explicit": {m: round(r, 3)
+                                    for m, r in ratio.items()},
+        "p99_us": {m: round(v, 1) for m, v in p99.items()},
+    }
+    return rows, acceptance
 
 
 def main() -> None:
@@ -283,8 +290,19 @@ def main() -> None:
                     help="tiny run for CI (correct plumbing, noisy numbers)")
     args = ap.parse_args()
     n = 4 * CHUNK if args.smoke else args.n
-    for row in run(n, repeats=1 if args.smoke else args.repeats):
+    repeats = 1 if args.smoke else args.repeats
+    rows, acceptance = run(n, repeats=repeats)
+    for row in rows:
         print(",".join(str(x) for x in row))
+    from benchmarks._util import write_bench_json
+    # smoke runs export under a separate (gitignored) name so CI never
+    # overwrites the committed full-run trajectory with tiny-n noise
+    write_bench_json("smoke_async_latency" if args.smoke
+                     else "async_latency",
+                     {"n_calls": n, "repeats": repeats,
+                      "load_fraction": LOAD_FRACTION, "chunk": CHUNK,
+                      "smoke": args.smoke},
+                     rows, acceptance)
 
 
 if __name__ == "__main__":

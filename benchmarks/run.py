@@ -34,6 +34,8 @@ MODULES = [
     "clear_policies",     # Table 6
     "multi_app",          # Table 7
     "async_latency",      # PR 2 auto-drain triggers (latency/throughput)
+    "wire_path",          # PR 4 GPV wire format (dict vs array marshalling)
+    "multi_channel",      # PR 5 sharded plane (workers sweep + fairness)
 ]
 
 
@@ -49,6 +51,8 @@ def main() -> int:
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             out = mod.run()
+            if isinstance(out, tuple):      # (rows, acceptance) benches
+                out = out[0]
             rows.extend(out)
             print(f"# {name}: {len(out)} rows ({time.time() - t0:.1f}s)",
                   file=sys.stderr)

@@ -46,6 +46,17 @@ class Gradient:
                                                   clear="copy")
                ) -> {"tensor": inc.Get[inc.FPArray]}: ...
 
+    # write-only accumulate (no reply-path clear), so Fetch below has
+    # stable map state to read
+    @inc.rpc(request_msg="Accum")
+    def Accum(self, tensor: inc.Agg[inc.FPArray](precision=6)): ...
+
+    # pure-query leg (ISSUE 5 satellite): an array-shaped ReadMostly
+    # request rides the TensorSegment path — element i reads dense
+    # address i — instead of being shredded into a per-element dict
+    @inc.rpc(request_msg="FetchReq", reply_msg="FetchReply")
+    def Fetch(self, tensor: inc.ReadMostly[inc.FPArray](precision=6)): ...
+
 
 def _fresh(n: int):
     rt = inc.NetRPC()
@@ -53,7 +64,8 @@ def _fresh(n: int):
 
 
 def _probe(n: int = 256) -> None:
-    """Both legs must agree element-exactly before timings mean anything."""
+    """Both legs must agree element-exactly — updates AND pure-query
+    reads — before timings mean anything."""
     g = np.random.RandomState(0).randn(n).astype(np.float32)
     out = {}
     for gpv in (True, False):
@@ -62,28 +74,39 @@ def _probe(n: int = 256) -> None:
             stub = _fresh(n)
             stub.Update(tensor=g).result()
             r = stub.Update(tensor=g).result()["tensor"]
-            out[gpv] = [r[i] for i in range(n)]
+            # Update cleared the map (clear="copy"); accumulate twice
+            # without clearing, then read back through the pure query
+            stub.Accum(tensor=g).result()
+            stub.Accum(tensor=g).result()
+            q = stub.Fetch(tensor=np.zeros(n, np.float32)).result()["tensor"]
+            out[gpv] = ([r[i] for i in range(n)], [q[i] for i in range(n)])
         finally:
             rpc_mod.set_gpv(prev)
-    assert out[True] == out[False], "GPV leg diverged from dict leg"
+    assert out[True][0] == out[False][0], "GPV leg diverged from dict leg"
+    assert out[True][1] == out[False][1], \
+        "GPV pure-query read diverged from dict leg"
 
 
-def _time_leg(gpv: bool, n: int, iters: int, repeats: int) -> float:
-    """Fastest mean seconds/call over ``repeats`` timed replays."""
+def _timed_leg(gpv: bool, n: int, iters: int, repeats: int,
+               setup, call) -> float:
+    """Fastest mean seconds/call of ``call(stub)`` over ``repeats`` timed
+    replays on fresh stubs; ``setup(stub)`` runs off-clock per replay
+    (grant-storm warmup / map population). One harness for the update and
+    read legs, so both always measure under identical conditions
+    (gc pinned, min-of-N, same set_gpv bracketing)."""
     import gc
-    g = np.random.RandomState(1).randn(n).astype(np.float32)
     best = None
     prev = rpc_mod.set_gpv(gpv)
     try:
         for _ in range(repeats):
             stub = _fresh(n)
-            stub.Update(tensor=g).result()      # grant-storm warmup
+            setup(stub)
             gc.collect()
             gc.disable()
             try:
                 t0 = time.perf_counter()
                 for _ in range(iters):
-                    stub.Update(tensor=g).result()
+                    call(stub)
                 dt = (time.perf_counter() - t0) / iters
             finally:
                 gc.enable()
@@ -93,7 +116,28 @@ def _time_leg(gpv: bool, n: int, iters: int, repeats: int) -> float:
     return best
 
 
-def run(sizes=SIZES, repeats: int = 3) -> list:
+def _time_leg(gpv: bool, n: int, iters: int, repeats: int) -> float:
+    """Update (addTo + Get + clear) leg."""
+    g = np.random.RandomState(1).randn(n).astype(np.float32)
+    return _timed_leg(gpv, n, iters, repeats,
+                      setup=lambda stub: stub.Update(tensor=g).result(),
+                      call=lambda stub: stub.Update(tensor=g).result())
+
+
+def _time_read_leg(gpv: bool, n: int, iters: int, repeats: int) -> float:
+    """Pure-query Fetch leg (map populated once via Accum, stable across
+    the timed reads)."""
+    g = np.random.RandomState(2).randn(n).astype(np.float32)
+    probe = np.zeros(n, np.float32)
+
+    def setup(stub):
+        stub.Accum(tensor=g).result()           # grant storm + population
+        stub.Fetch(tensor=probe).result()       # path warmup
+    return _timed_leg(gpv, n, iters, repeats, setup=setup,
+                      call=lambda stub: stub.Fetch(tensor=probe).result())
+
+
+def run(sizes=SIZES, repeats: int = 3) -> tuple[list, dict]:
     _probe()
     rows = []
     gate = None
@@ -114,12 +158,33 @@ def run(sizes=SIZES, repeats: int = 3) -> list:
                          f"calls_per_sec={1.0 / dt:.1f}"
                          f" elems_per_sec={n / dt:.0f}"))
         rows.append((f"t_wire/speedup/n{n}", 0, f"gpv_vs_dict={ratio:.2f}x"))
+    # pure-query reads (one representative size): the ReadMostly array
+    # request riding the TensorSegment path vs the {i: v} dict reference
+    read_n = GATE_N if GATE_N in sizes else max(sizes)
+    read_iters = max(2, min(12, (1 << 19) // read_n))
+    rd = rr = None
+    for _ in range(repeats):
+        d = _time_read_leg(False, read_n, read_iters, 1)
+        a = _time_read_leg(True, read_n, read_iters, 1)
+        rd = d if rd is None else min(rd, d)
+        rr = a if rr is None else min(rr, a)
+    read_ratio = rd / rr
+    for leg, dt in (("dict", rd), ("gpv", rr)):
+        rows.append((f"t_wire/read_{leg}/n{read_n}", round(dt * 1e6, 1),
+                     f"calls_per_sec={1.0 / dt:.1f}"
+                     f" elems_per_sec={read_n / dt:.0f}"))
+    rows.append((f"t_wire/read_speedup/n{read_n}", 0,
+                 f"gpv_vs_dict={read_ratio:.2f}x"))
+    acceptance = {"read_speedup": round(read_ratio, 2),
+                  "read_n": read_n}
     if gate is not None:
+        verdict = "PASS" if gate >= GATE_X else "FAIL"
         rows.append(("t_wire/acceptance", 0,
                      f"gpv_vs_dict@{GATE_N}={gate:.2f}x"
-                     f" (need >= {GATE_X:.0f}x:"
-                     f" {'PASS' if gate >= GATE_X else 'FAIL'})"))
-    return rows
+                     f" (need >= {GATE_X:.0f}x: {verdict})"))
+        acceptance.update({"gpv_vs_dict": round(gate, 2),
+                           "target": GATE_X, "verdict": verdict})
+    return rows, acceptance
 
 
 def main() -> None:
@@ -132,10 +197,18 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
     sizes = (1 << 10, 1 << 12) if args.smoke else SIZES
-    rows = run(sizes, repeats=1 if args.smoke else args.repeats)
+    repeats = 1 if args.smoke else args.repeats
+    rows, acceptance = run(sizes, repeats=repeats)
     lines = [",".join(str(x) for x in row) for row in rows]
     for ln in lines:
         print(ln)
+    from benchmarks._util import write_bench_json
+    # smoke runs export under a separate (gitignored) name so CI never
+    # overwrites the committed full-run trajectory with tiny-n noise
+    write_bench_json("smoke_wire_path" if args.smoke else "wire_path",
+                     {"sizes": list(sizes), "repeats": repeats,
+                      "smoke": args.smoke},
+                     rows, acceptance)
     if args.csv:
         from pathlib import Path
         out = Path(__file__).resolve().parent / "results.csv"

@@ -35,6 +35,10 @@ if [ "$status" -ne 0 ]; then
     exit "$status"
 fi
 
+# the smokes below must (re)write their BENCH_*.json exports — record the
+# lane start so the trajectory check can reject stale files
+bench_stamp=$(date +%s)
+
 # smoke the async-runtime benchmark plumbing (tiny n; numbers not asserted)
 smoke_log=$(mktemp)
 if ! timeout 300 python -m benchmarks.async_latency --smoke > "$smoke_log" 2>&1; then
@@ -57,6 +61,51 @@ if ! timeout 300 python -m benchmarks.wire_path --smoke > "$smoke_log" 2>&1; the
 fi
 rm -f "$smoke_log"
 echo "wire_path smoke: OK"
+
+# smoke the sharded-plane benchmark (tiny window; exercises the worker
+# pool, weighted-fair drain loop, and the starvation check plumbing)
+smoke_log=$(mktemp)
+if ! timeout 300 python -m benchmarks.multi_channel --smoke > "$smoke_log" 2>&1; then
+    echo "FAST LANE: FAIL (multi_channel smoke); output:"
+    cat "$smoke_log"
+    rm -f "$smoke_log"
+    exit 1
+fi
+rm -f "$smoke_log"
+echo "multi_channel smoke: OK"
+
+# bench trajectory export: every BENCH_*.json must parse and carry the
+# (bench, config, rows, acceptance) shape. The three benches smoked above
+# write gitignored BENCH_smoke_*.json (so the committed full-run
+# trajectory survives CI); those must be fresh this lane — a stale file
+# would otherwise mask a broken write_bench_json.
+if ! BENCH_STAMP="$bench_stamp" python - <<'EOF'
+import json
+import os
+import pathlib
+import sys
+
+stamp = int(os.environ["BENCH_STAMP"])
+files = sorted(pathlib.Path("benchmarks").glob("BENCH_*.json"))
+if not files:
+    sys.exit("no BENCH_*.json exported — the trajectory satellite broke")
+for f in files:
+    d = json.loads(f.read_text())
+    for key in ("bench", "config", "rows", "acceptance"):
+        assert key in d, f"{f}: missing {key!r}"
+    assert isinstance(d["rows"], list) and d["rows"], f"{f}: empty rows"
+for name in ("async_latency", "wire_path", "multi_channel"):
+    f = pathlib.Path(f"benchmarks/BENCH_smoke_{name}.json")
+    assert f.exists(), f"{f}: the smoked bench exported nothing"
+    assert f.stat().st_mtime >= stamp, \
+        f"{f}: stale — this lane's smoke did not rewrite it"
+print(f"bench trajectory: {len(files)} BENCH_*.json parse OK, "
+      f"3 smoke exports fresh")
+EOF
+then
+    echo "FAST LANE: FAIL (BENCH_*.json export)"
+    exit 1
+fi
 
 # examples lane: the four typed-schema INC apps are the front door — an
 # API regression here must fail CI, not users. Each example self-asserts

@@ -17,6 +17,7 @@ device memory for dead clients.
 from __future__ import annotations
 
 import itertools
+import threading
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -114,6 +115,13 @@ class Channel:
         self.stats = ChannelStats()
         self.app_type = nf.app_type()
         self.pending: list = []
+        # the channel-scoped plane lock: every pipeline pass on this
+        # channel (inline Stub.call, scheduled drain, nested handler
+        # follow-up) runs under it, so one channel's data plane is always
+        # serial while passes on *other* channels proceed concurrently
+        # (the sharded plane of core/runtime.py). Re-entrant: a handler's
+        # inline call on its own channel nests inside the owning pass.
+        self.plane = threading.RLock()
         # per-channel auto-drain override (a runtime DrainPolicy), set by
         # the schema layer's @inc.service/@inc.rpc drain= option; None ->
         # the runtime's default policy

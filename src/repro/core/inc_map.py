@@ -32,9 +32,10 @@ lookup per element.
 """
 from __future__ import annotations
 
+import threading
 import zlib
 from collections import Counter
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax.numpy as jnp
 import numpy as np
@@ -193,9 +194,18 @@ class _SpillMap(_VersionedDict):
 
 @dataclass
 class Segment:
-    """One switch register segment (paper: 40K 32-bit units per segment)."""
+    """One switch register segment (paper: 40K 32-bit units per segment).
+
+    ``lock`` stripes the switch memory per segment (the sharded-plane
+    concurrency unit): two channels whose partitions live in different
+    segments update registers fully in parallel; only co-resident
+    partitions serialize, and only for the duration of one kernel batch.
+    The read-modify-write of ``regs`` (functional ``sparse_addto`` update)
+    must be atomic per segment or concurrent batches lose updates.
+    """
     n_slots: int
     regs: jnp.ndarray = None
+    lock: threading.Lock = field(default_factory=threading.Lock)
 
     def __post_init__(self):
         if self.regs is None:
@@ -215,6 +225,7 @@ class SwitchMemory:
         self.segments = [Segment(seg_slots) for _ in range(n_segments)]
         self.partitions: dict[int, tuple[int, int]] = {}  # gaid -> (start, n)
         self._next_free = 0
+        self._alloc_lock = threading.Lock()   # reserve/release bookkeeping
 
     @property
     def total_slots(self) -> int:
@@ -222,20 +233,22 @@ class SwitchMemory:
 
     def reserve(self, gaid: int, n_slots: int) -> bool:
         """FCFS partition reservation at app registration (§5.2.2)."""
-        if gaid in self.partitions:
+        with self._alloc_lock:
+            if gaid in self.partitions:
+                return True
+            if self._next_free + n_slots > self.total_slots:
+                return False
+            self.partitions[gaid] = (self._next_free, n_slots)
+            self._next_free += n_slots
             return True
-        if self._next_free + n_slots > self.total_slots:
-            return False
-        self.partitions[gaid] = (self._next_free, n_slots)
-        self._next_free += n_slots
-        return True
 
     def release(self, gaid: int) -> None:
         # partitions are compacted lazily; released ranges are re-usable
         # only at the tail (switch memory cannot be defragmented at runtime)
-        part = self.partitions.pop(gaid, None)
-        if part and part[0] + part[1] == self._next_free:
-            self._next_free = part[0]
+        with self._alloc_lock:
+            part = self.partitions.pop(gaid, None)
+            if part and part[0] + part[1] == self._next_free:
+                self._next_free = part[0]
 
     def _locate(self, phys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         return phys // self.seg_slots, phys % self.seg_slots
@@ -263,17 +276,26 @@ class SwitchMemory:
             return
         for s, m in self._seg_groups(seg_ix):
             seg = self.segments[s]
-            seg.regs = ops.sparse_addto_bucketed(
-                seg.regs, np.asarray(off[m], np.int32),
-                np.asarray(vals[m], np.int32))
+            with seg.lock:
+                seg.regs = ops.sparse_addto_bucketed(
+                    seg.regs, np.asarray(off[m], np.int32),
+                    np.asarray(vals[m], np.int32))
 
     def get(self, phys: np.ndarray) -> np.ndarray:
+        # reads take the segment lock too: the host-path kernel updates
+        # ``regs`` IN PLACE (kernels/ops.py:sparse_addto), so a lock-free
+        # gather could see a torn mid-batch state of a co-resident
+        # partition's update. Read-your-writes ordering still comes from
+        # the channel plane lock; this only serializes against another
+        # channel's in-flight kernel batch on a shared segment.
         out = np.zeros(len(phys), np.int32)
         if not len(phys):
             return out
         seg_ix, off = self._locate(np.asarray(phys))
         for s, m in self._seg_groups(seg_ix):
-            out[m] = np.asarray(self.segments[s].regs)[off[m]]
+            seg = self.segments[s]
+            with seg.lock:
+                out[m] = np.asarray(seg.regs)[off[m]]
         return out
 
     def clear(self, phys: np.ndarray) -> None:
@@ -282,10 +304,23 @@ class SwitchMemory:
         seg_ix, off = self._locate(np.asarray(phys))
         for s, m in self._seg_groups(seg_ix):
             seg = self.segments[s]
-            if isinstance(seg.regs, np.ndarray):   # host-path register file
-                seg.regs[off[m]] = 0
-            else:
-                seg.regs = seg.regs.at[jnp.asarray(off[m])].set(0)
+            with seg.lock:
+                if isinstance(seg.regs, np.ndarray):  # host register file
+                    seg.regs[off[m]] = 0
+                else:
+                    seg.regs = seg.regs.at[jnp.asarray(off[m])].set(0)
+
+
+def _locked(fn):
+    """Run an agent data-path method under the instance's re-entrant
+    ``lock`` (one acquire per *batch* call, not per element)."""
+    import functools
+
+    @functools.wraps(fn)
+    def wrapper(self, *a, **kw):
+        with self.lock:
+            return fn(self, *a, **kw)
+    return wrapper
 
 
 class ServerAgent:
@@ -306,6 +341,13 @@ class ServerAgent:
         self.policy = policy
         self.pon_threshold = pon_threshold
         self.window = window
+        # per-instance lock (sharded data plane): an agent belongs to one
+        # channel, whose pipeline passes are already serialized by the
+        # channel plane lock — this lock additionally makes direct agent
+        # reads (stub.agents[m].read, benchmarks, telemetry) safe against
+        # a drain running concurrently on another thread. Re-entrant:
+        # data-path methods call each other (read -> read_batch).
+        self.lock = threading.RLock()
         self.granted = switch.reserve(gaid, n_slots)
         self.base, self.capacity = (switch.partitions.get(gaid, (0, 0)))
         self.mapping: dict[int, int] = _VersionedDict()  # logical -> physical
@@ -343,6 +385,7 @@ class ServerAgent:
     # -- snapshot plumbing ------------------------------------------------
 
     @property
+    @_locked
     def window_counts(self) -> Counter:
         """Materialized per-window usage Counter (legacy view). Insertion
         order matches the old eager ``Counter.update(stream)``: chunks are
@@ -441,6 +484,7 @@ class ServerAgent:
 
     # -- data path ------------------------------------------------------
 
+    @_locked
     def addto_batch(self, logical: np.ndarray, vals: np.ndarray) -> None:
         """Route a batch of (logical addr, value) updates: INC or host.
         Fully vectorized: one mapping lookup, one switch kernel batch for
@@ -486,6 +530,7 @@ class ServerAgent:
             self.end_window()
         self._flush_migrations()
 
+    @_locked
     def spill_host(self, pairs: list[tuple[int, int]]) -> None:
         """Batched host-path fold for collision-routed (logical, delta)
         pairs: ONE stats update + one folded spill write per flush instead
@@ -505,6 +550,7 @@ class ServerAgent:
         """Map.get: switch register (if mapped) + host spill."""
         return int(self.read_batch(np.array([logical], np.uint32))[0])
 
+    @_locked
     def read_batch(self, logical: np.ndarray) -> np.ndarray:
         """Batched Map.get: ONE switch gather for all mapped addresses plus
         the host-spill components — the data-plane read of call_batch.
@@ -529,6 +575,7 @@ class ServerAgent:
                     self.base + slotv[hit]).astype(np.int64)
         return out
 
+    @_locked
     def read_all(self) -> dict[int, int]:
         out = dict(self.spill)
         if self.mapping:
@@ -538,6 +585,7 @@ class ServerAgent:
                 out[l] = out.get(l, 0) + int(v)
         return out
 
+    @_locked
     def clear_all(self) -> None:
         self._pending_migrations.clear()    # values below are wiped anyway
         if self.mapping:
@@ -587,6 +635,7 @@ class ServerAgent:
         if phys:
             self.switch.addto(np.array(phys), np.array(vals, np.int32))
 
+    @_locked
     def end_window(self) -> None:
         """Periodic counting-based LRU (§5.2.2): clients report per-window
         use counts; the agent evicts mapped keys colder than unmapped ones.
@@ -632,6 +681,7 @@ class ServerAgent:
         self._clear_window()
         self._flush_migrations()
 
+    @_locked
     def retrieve_all(self) -> None:
         """Pull every mapped register value into the host-side map (the
         level-1 timeout retrieval of §5.2.2, also used at graceful stop):
@@ -677,6 +727,11 @@ class ClientAgent:
 
     def __init__(self, server: ServerAgent):
         self.server = server
+        # per-instance lock: an agent serves one stub method, whose
+        # pipeline passes the channel plane lock already serializes —
+        # this guards the memoization tables when user threads call
+        # ``read``/``logical`` directly while a drain is in flight
+        self.lock = threading.RLock()
         self.key_of: dict[int, str | bytes | int] = {}
         self.collisions: dict[str | bytes | int, int] = {}
         self._addr: dict = {}          # key -> logical (or None): memoized
@@ -688,6 +743,7 @@ class ClientAgent:
         self._dense_coll_arr = np.zeros(0, np.int64)
         self._foreign: dict[int, None] = {}   # addrs owned by foreign keys
 
+    @_locked
     def logical(self, key) -> int | None:
         """Returns the logical address, or None if the key must bypass INC.
 
@@ -730,12 +786,14 @@ class ClientAgent:
                 self._dense_coll_arr = np.array(self._dense_coll, np.int64)
         self._dense_n = n
 
+    @_locked
     def dense_addrs(self, n: int) -> np.ndarray:
         """Logical addresses of dense indices 0..n-1: one cached-arange
         slice (the Map.get address vector of a GPV tensor reply)."""
         self._ensure_dense(n)
         return self._dense_log[:n]
 
+    @_locked
     def resolve_dense(self, n: int, qvals: np.ndarray
                       ) -> tuple[np.ndarray, np.ndarray,
                                  list[tuple[int, int]]]:
@@ -755,6 +813,7 @@ class ClientAgent:
             return logs[keep], qvals[keep], spills
         return logs, qvals, []
 
+    @_locked
     def resolve(self, kv: dict, precision: int = 0
                 ) -> tuple[np.ndarray, np.ndarray, list[tuple[int, int]]]:
         """Key -> logical-address resolution without touching the server:

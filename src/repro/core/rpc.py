@@ -134,12 +134,18 @@ class Server:
     def __init__(self):
         self.handlers: dict[str, Callable[[dict], dict]] = {}
         self.calls_seen = 0
+        # the host server is shared by every channel; with the sharded
+        # plane two channels' pipeline passes invoke handlers
+        # concurrently, so the counter increment needs its own lock
+        # (handlers themselves run outside it — they may nest RPCs)
+        self._seen_lock = threading.Lock()
 
     def register(self, method: str, fn: Callable[[dict], dict]) -> None:
         self.handlers[method] = fn
 
     def handle(self, method: str, request: dict) -> dict:
-        self.calls_seen += 1
+        with self._seen_lock:
+            self.calls_seen += 1
         fn = self.handlers.get(method)
         return fn(request) if fn else {}
 
@@ -226,6 +232,9 @@ class _PlannedCall:
     request: dict
     array_reply: bool = False                   # ndarray Map.get reply ok
     items: "dict | TensorSegment" = field(default_factory=dict)
+    qitems: "dict | TensorSegment" = field(default_factory=dict)
+    #         ^ pure-query (ReadMostly/Get-only) key stream: array-shaped
+    #           query fields ride the GPV path like addTo streams do
     logs: np.ndarray | None = None              # resolved logical addrs
     vals: np.ndarray | None = None
     spills: list = field(default_factory=list)  # collision host-path pairs
@@ -289,16 +298,48 @@ class _MapOpBuffer:
             self._logs, self._vals = [], []
 
 
+# How long a pipeline pass may wait for a channel's plane lock before
+# concluding the wait is a cross-channel handler cycle (pass on A nested
+# into B while a pass on B nested into A) and raising instead of hanging.
+PLANE_LOCK_TIMEOUT = 60.0
+
+
 def _run_pipeline(channel: Channel, host_server: Server,
                   calls: list[_PlannedCall],
                   source: str = "explicit") -> list[dict]:
     """THE data-plane pipeline. Every entry point (call / call_batch /
     drain) lands here; N=1 is just a batch of one.
 
+    Channel-scoped locking: the pass runs under ``channel.plane`` (a
+    re-entrant lock), so one channel's pipeline is always serial — the
+    PR 1 sequential/mid-batch-failure semantics are per channel — while
+    passes on other channels run concurrently (the sharded plane of
+    core/runtime.py). A handler's nested inline call re-enters on its own
+    channel and acquires the target's lock on a cross-channel call; a
+    cyclic cross-channel handler graph is converted into a RuntimeError
+    after ``PLANE_LOCK_TIMEOUT`` instead of a silent deadlock.
+
     ``source`` attributes the pass to the caller-built ("explicit") or the
     runtime-coalesced ("drained") counters so coalescing efficiency is not
     diluted by interleaved N=1 Stub.call passes on the same channel.
     """
+    if not channel.plane.acquire(timeout=PLANE_LOCK_TIMEOUT):
+        raise RuntimeError(
+            f"pipeline pass on channel {channel.netfilter.app_name!r} "
+            f"could not take the channel plane lock within "
+            f"{PLANE_LOCK_TIMEOUT:.0f}s — likely a cyclic cross-channel "
+            f"handler call graph (a handler on A calling B while a "
+            f"handler on B calls A); break the cycle or use call_async "
+            f"for the follow-up")
+    try:
+        return _run_pipeline_locked(channel, host_server, calls, source)
+    finally:
+        channel.plane.release()
+
+
+def _run_pipeline_locked(channel: Channel, host_server: Server,
+                         calls: list[_PlannedCall],
+                         source: str) -> list[dict]:
     server = channel.server
     if channel.active_buf is not None:
         # nested pass (a handler's inline follow-up call on its own
@@ -321,9 +362,22 @@ def _run_pipeline(channel: Channel, host_server: Server,
     for c in calls:
         c.items = (_stream_items(c.request, c.nf.add_to)
                    if c.nf.add_to != "nop" else {})
-        if isinstance(c.items, TensorSegment):
+        if c.nf.add_to == "nop" and c.nf.get != "nop":
+            # pure query (ReadMostly / Get-only): the request field carries
+            # keys. Array-shaped key streams ride the same GPV path as
+            # addTo tensors (dense identity addresses, one vectorized
+            # read_batch) instead of a per-element dict.
+            c.qitems = _stream_items(c.request, c.nf.get)
+            if isinstance(c.qitems, TensorSegment) and not len(c.qitems):
+                # a zero-length query array means "no keys named": demote
+                # to the dict path so both legs take the same every-
+                # spilled-key fallback below (GPV==dict must hold at n=0)
+                c.qitems = {}
+        seg = (c.items if isinstance(c.items, TensorSegment) else
+               c.qitems if isinstance(c.qitems, TensorSegment) else None)
+        if seg is not None:
             channel.stats.gpv_calls += 1
-            channel.stats.gpv_elems += len(c.items)
+            channel.stats.gpv_elems += len(seg)
     groups: dict[tuple[str, int], list[int]] = {}
     for i, c in enumerate(calls):
         if c.items and c.nf.modify.op != "nop":
@@ -421,12 +475,15 @@ def _run_pipeline(channel: Channel, host_server: Server,
                 buf.flush()      # this get must observe every earlier addTo
                 fname = c.nf.get.split(".")[-1]
                 scale = 10 ** c.nf.precision
-                if isinstance(c.items, TensorSegment):
+                seg = (c.items if isinstance(c.items, TensorSegment) else
+                       c.qitems if isinstance(c.qitems, TensorSegment)
+                       else None)
+                if seg is not None:
                     # GPV reply: one address-table slice, one gather, one
-                    # vectorized dequantize. Schema-bound stubs take the
-                    # ndarray (request-shaped); legacy stubs keep the
-                    # historical {index: value} dict.
-                    seg = c.items
+                    # vectorized dequantize — for the addTo stream's echo
+                    # AND for pure-query (ReadMostly/Get) array requests.
+                    # Schema-bound stubs take the ndarray (request-shaped);
+                    # legacy stubs keep the historical {index: value} dict.
                     logs = c.agent.dense_addrs(len(seg))
                     raw = server.read_batch(logs)
                     vals = raw / scale
@@ -438,7 +495,11 @@ def _run_pipeline(channel: Channel, host_server: Server,
                     if c.nf.add_to != "nop":
                         keys = list(c.items.keys())
                     else:
-                        keys = list(c.request.get(fname, {}).keys()) or \
+                        # dict reference path for pure queries: qitems is
+                        # the request field's {key: _} map ({i: x} for an
+                        # array-shaped field with GPV off); an absent
+                        # field still falls back to every spilled key
+                        keys = list(c.qitems.keys()) or \
                             list(server.spill.keys())
                     logs = np.array([hash_key(k) for k in keys], np.uint32)
                     raw = (server.read_batch(logs) if len(logs)
@@ -743,6 +804,16 @@ class NetRPC:
                         f"DrainPolicy override ({ch.drain_policy}); "
                         f"schemas sharing a channel must agree")
                 ch.drain_policy = pol
+                # per-channel ServerAgent LRU-window override: huge-tensor
+                # channels raise it so a window does not end every call
+                # (getattr keeps this module free of a runtime import)
+                w = getattr(pol, "window", None)
+                if w is not None:
+                    if int(w) < 1:
+                        raise ValueError(
+                            f"channel {app!r}: DrainPolicy.window must be "
+                            f">= 1, got {w}")
+                    ch.server.window = int(w)
         stub = Stub(service, channels, self.server, runtime=self)
         return schema.bind(stub) if schema is not None else stub
 

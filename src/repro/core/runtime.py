@@ -1,53 +1,68 @@
-"""Async INC runtime: futures, auto-drain scheduling, and backpressure-
-coupled micro-batching (paper §5).
+"""Async INC runtime: futures, sharded auto-drain workers, weighted-fair
+scheduling, and backpressure-coupled micro-batching (paper §3.2, §5).
 
-PR 1 built the batched data plane but left *scheduling* to the caller:
-goodput needed an explicit ``NetRPC.drain()`` in application code. This
-module moves that burden into the runtime, the way §3.2/§5 describe the
-shared INC plane: applications issue ordinary async RPCs
-(``Stub.call_async -> IncFuture``) and the platform decides when a
-channel's queue becomes a pipeline batch.
+PR 1 built the batched data plane, PR 2 the auto-drain scheduler — but one
+scheduler thread executed every pipeline pass under one global plane lock,
+so a multi-application deployment ran no faster than a single-application
+one. That contradicts the paper's central claim: the INC data plane is
+*shared*, with many applications using it concurrently (§3.2, Fig. 12).
+This module is the sharded version of that plane:
 
-A single scheduler thread watches every channel queue and drains one when
-any of three triggers fires — each the in-process analogue of a §5 flow-
-control mechanism:
+  workers   ``IncRuntime(workers=N)`` runs a pool of N drain workers.
+            Channels are the concurrency unit: a pipeline pass runs under
+            its channel's own plane lock (``Channel.plane``), so passes
+            for *independent* channels execute in parallel — different
+            switch-memory segments never contend (per-``Segment`` lock
+            striping in core/inc_map.py), and each channel's
+            ServerAgent/ClientAgent carry per-instance locks. One
+            channel's pipeline stays strictly serial (``busy_owner``
+            claim + plane lock), which pins the PR 1 sequential and
+            mid-batch-failure semantics per channel. ``workers=1`` (the
+            default) is behaviorally identical to the PR 2 runtime: same
+            triggers, same admission control, same future semantics.
 
-  size    the queue reached ``DrainPolicy.max_batch`` calls: the line-rate
-          coalescing window is full (§5's batched RIP execution — one
-          sparse_addto kernel batch per register segment instead of one
-          round trip per call).
-  time    the oldest queued call aged past ``max_delay``: the bounded-
-          delay flush that keeps p99 latency finite at low offered load
-          (the reliability timer of §5.1 repurposed as a batching
-          deadline).
-  window  the transport's AIMD congestion window (core/transport.py) has
-          room for the whole queue: ship it now rather than hold latency.
-          The simulated switch ingress queue (occupancy, serviced at
-          ``service_rate`` calls/s) marks ECN above ``ecn_threshold``
-          exactly like FlipBitSwitch does on the wire (§5.1: ECN persisted
-          so loss cannot erase it); each drained batch acks the window, so
-          congestion halves ``cw`` (multiplicative decrease) and shrinks
-          both the per-drain take and the admission bound.
+  fairness  The ready-queue is serviced with strict-priority tiers and
+            deficit-round-robin (DRR) inside a tier. Channels carry a
+            ``priority`` class and a ``weight`` (DrainPolicy fields,
+            settable per-RPC/service via the schema layer's
+            ``@inc.rpc(priority=, weight=)``): a drain-eligible channel in
+            a higher tier is always picked first; within a tier every
+            ready channel earns ``weight`` credit per pick and the pick
+            goes to the largest accumulated deficit, which then pays its
+            batch size back — long-run drained calls are proportional to
+            weight, and any positive weight guarantees progress (no
+            starvation inside a tier). This is the host-side analogue of
+            fair scheduling across competing INC flows (P4COM): it keeps
+            a shared plane from degrading to head-of-line blocking behind
+            one hot channel.
+
+The per-channel drain triggers are unchanged from PR 2 — each the
+in-process analogue of a §5 flow-control mechanism:
+
+  size    the queue reached ``DrainPolicy.max_batch`` calls (line-rate
+          coalescing window full).
+  time    the oldest queued call aged past ``max_delay`` (bounded-delay
+          flush keeping p99 finite at low load).
+  window  the AIMD congestion window (core/transport.py) has room for the
+          whole queue. The simulated switch ingress queue marks ECN above
+          ``ecn_threshold`` like FlipBitSwitch does on the wire; each
+          drained batch acks the window, so congestion halves ``cw``.
 
 Backpressure closes the loop: ``call_async`` blocks once a channel's
 backlog exceeds ``backlog_factor * cw`` — admission throttles at the
-sender, queues stay bounded, and a congested switch propagates all the way
-back to the producing thread instead of to unbounded memory growth. (The
-scheduler thread itself is exempt, so a server handler may submit
-follow-up calls without deadlocking its own drain.)
+sender. Worker threads and handler (in-pipeline) threads are exempt: they
+may hold a channel plane lock another drain needs, so waiting deadlocks.
 
-Completion runs off-thread: the scheduler resolves each call's IncFuture
-after its batch executes, preserving PR 1's sequential-equivalence and
-mid-batch-failure semantics — completed calls keep their INC side effects
-and resolve; the failing call's future re-raises the handler exception;
-calls queued behind it in the same batch resolve to a chained "abandoned"
-error.
+Completion runs off-thread with PR 1 semantics: completed calls keep
+their INC side effects and resolve; the failing call's future re-raises
+the handler exception; calls queued behind it in the same batch resolve
+to a chained "abandoned" error. Synchronous fronts stay available and
+ordered per channel; ``drain()`` means *flush everything synchronously*.
 
-Synchronous fronts stay available and ordered: ``Stub.call`` /
-``call_batch`` on an IncRuntime stub first drain the channel's queued
-async calls (issue order is preserved on the channel), then run inline.
-``drain()`` still exists but now means *flush everything synchronously*;
-application code never needs it — the runtime owns scheduling.
+``scheduling_report()`` exposes the whole fleet: per-channel coalescing
+and GPV counters (audited: drained + explicit == total), plus a
+``"__plane__"`` section with per-worker drain/steal counters, per-priority
+drain counts and queue-wait percentiles, and the pick-contention count.
 """
 from __future__ import annotations
 
@@ -64,7 +79,13 @@ from repro.core.transport import AimdState, W_MAX_DEFAULT
 
 @dataclass
 class DrainPolicy:
-    """Trigger knobs for the auto-drain scheduler (see module docstring)."""
+    """Trigger + scheduling knobs for the drain workers (module docstring).
+
+    ``priority``/``weight`` place the channel in the weighted-fair drain
+    loop; ``window`` (optional) overrides the channel ServerAgent's LRU
+    window length — huge-tensor channels raise it so each call does not
+    end a cache window (the ROADMAP per-channel window knob).
+    """
     max_batch: int = 64            # size trigger / per-drain take cap
     max_delay: float = 0.002       # time trigger, seconds
     eager_window: bool = True      # window trigger enabled
@@ -73,8 +94,11 @@ class DrainPolicy:
     service_rate: float = 200_000.0  # simulated switch drain, calls/s
     w_max: int = W_MAX_DEFAULT     # AIMD window cap
     cw_init: int | None = None     # initial window; None -> the batch target
-                                   # (AIMD halves it on ECN, so congestion —
-                                   # not slow-start — sets the steady state)
+    #                                (AIMD halves it on ECN, so congestion —
+    #                                 not slow-start — sets the steady state)
+    priority: int = 0              # strict tier: higher drains first
+    weight: float = 1.0            # DRR share within the tier (> 0)
+    window: int | None = None      # ServerAgent LRU window override
 
     def initial_cw(self) -> int:
         cw = self.cw_init if self.cw_init is not None else self.max_batch
@@ -82,6 +106,12 @@ class DrainPolicy:
 
     def backlog_limit(self, cw: int) -> int:
         return max(self.max_batch, self.backlog_factor * cw)
+
+
+# deficit accumulation cap, in units of weight-credits: a channel that is
+# ready but rarely picked (bursty arrivals) cannot bank unbounded credit
+# and then monopolize the tier when it finally gets hot
+_DEFICIT_CAP_BATCHES = 4
 
 
 class _ChannelQueue:
@@ -92,9 +122,13 @@ class _ChannelQueue:
 
     __slots__ = ("channel", "policy", "entries", "aimd", "occupancy",
                  "busy_owner", "demand", "last_service", "backlog_limit",
-                 "wake")
+                 "wake", "deficit", "last_worker", "drain_waits")
 
     def __init__(self, channel: Channel, policy: DrainPolicy, now: float):
+        if not (policy.weight > 0):      # rejects NaN too, not just <= 0
+            raise ValueError(
+                f"channel {channel.netfilter.app_name!r}: DrainPolicy."
+                f"weight must be > 0, got {policy.weight}")
         self.channel = channel
         self.policy = policy
         self.wake = None                   # demand hook, set by the runtime
@@ -107,58 +141,79 @@ class _ChannelQueue:
         # cached admission bound, refreshed whenever AIMD moves cw (the
         # submission path checks it per call)
         self.backlog_limit = policy.backlog_limit(self.aimd.cw)
+        # weighted-fair drain loop state
+        self.deficit = 0.0                 # DRR credit within the tier
+        self.last_worker: int | None = None
+        self.drain_waits: list = [0, 0.0, 0.0]   # [drains, wait_sum, max]
 
     def room(self) -> int:
         return max(0, self.aimd.cw - int(self.occupancy))
 
 
 class IncRuntime(NetRPC):
-    """NetRPC with the auto-drain scheduler attached.
+    """NetRPC with the sharded auto-drain worker pool attached.
 
     Usage::
 
-        rt = IncRuntime()                  # or IncRuntime(policy=...)
+        rt = IncRuntime(workers=4)         # or IncRuntime(policy=...)
         stub = rt.make_stub(svc)
         fut = stub.call_async("Push", {...})   # returns immediately
         ...
         reply = fut.result()               # blocks only until its batch drains
         rt.close()                         # or: with IncRuntime() as rt: ...
 
-    One scheduler thread serves every channel; pipeline passes (scheduled
-    drains AND inline Stub.call paths) serialize on a single plane lock, so
-    the host data plane never runs concurrently with itself.
+    ``workers`` drain workers serve every channel; pipeline passes for
+    independent channels run in parallel (each under its own channel
+    plane lock), while one channel's passes stay strictly serial.
+    ``workers=1`` (default) is the single-thread fallback — behaviorally
+    identical to the PR 2 runtime.
     """
 
     def __init__(self, controller=None, policy: DrainPolicy | None = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, workers: int = 1):
         super().__init__(controller)
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
         self.policy = policy or DrainPolicy()
+        self.workers = int(workers)
         self._clock = clock
         self._queues: dict[int, _ChannelQueue] = {}
         # plain Lock: nothing re-acquires _work while holding it, and the
-        # submission path pays for every acquire
+        # submission path pays for every acquire. Lock order is
+        # channel.plane -> _work (a handler inside a pipeline pass may
+        # submit follow-up calls); nothing acquires a plane lock while
+        # holding _work.
         self._work = threading.Condition(threading.Lock())
-        self._plane = threading.RLock()     # serializes pipeline passes;
-        #                                     re-entrant for handler calls
-        self._tls = threading.local()       # in_pipeline depth per thread
-        self._thread: threading.Thread | None = None
+        self._tls = threading.local()       # pipeline depth / worker marker
+        self._threads: list[threading.Thread] = []
         self._closed = False
+        # fleet observability (all guarded by _work)
+        self._worker_stats = [{"drains": 0, "calls": 0, "steals": 0}
+                              for _ in range(self.workers)]
+        self._prio_stats: dict[int, dict] = {}
+        self._pick_contention = 0   # picks that went hungry while the only
+        #                             drain-eligible channels were busy
 
     def _in_pipeline(self) -> bool:
         """True when the calling thread is inside a pipeline pass (i.e. a
-        server handler). Such a thread holds the plane lock, so it must
-        never wait on busy flags or admission — another thread's drain
-        could be blocked on the plane lock it holds (deadlock cycle)."""
+        server handler). Such a thread holds its channel's plane lock, so
+        it must never wait on busy flags or admission — another thread's
+        drain could be blocked on a lock it holds (deadlock cycle)."""
         return getattr(self._tls, "depth", 0) > 0
 
+    def _is_worker(self) -> bool:
+        return getattr(self._tls, "worker", False)
+
     def _run_plane(self, fn):
-        """Run ``fn`` under the plane lock with the re-entrancy marker."""
-        with self._plane:
-            self._tls.depth = getattr(self._tls, "depth", 0) + 1
-            try:
-                return fn()
-            finally:
-                self._tls.depth -= 1
+        """Run ``fn`` with the in-pipeline re-entrancy marker set. The
+        actual mutual exclusion is channel-scoped now: _run_pipeline
+        acquires ``channel.plane`` itself, so this wrapper only maintains
+        the per-thread nesting depth the deadlock guards read."""
+        self._tls.depth = getattr(self._tls, "depth", 0) + 1
+        try:
+            return fn()
+        finally:
+            self._tls.depth -= 1
 
     # -- async front ---------------------------------------------------------
 
@@ -168,10 +223,12 @@ class IncRuntime(NetRPC):
         (Channel.drain_policy) wins over the runtime default."""
         if self._closed:
             raise RuntimeError("runtime is closed")
-        if self._thread is None:
-            self._thread = threading.Thread(
-                target=self._loop, name="inc-runtime-drain", daemon=True)
-            self._thread.start()
+        if not self._threads:
+            for i in range(self.workers):
+                t = threading.Thread(target=self._loop, args=(i,),
+                                     name=f"inc-drain-{i}", daemon=True)
+                self._threads.append(t)
+                t.start()
         q = self._queues.get(ch.gaid)
         if q is None:
             q = self._queues[ch.gaid] = _ChannelQueue(
@@ -184,12 +241,12 @@ class IncRuntime(NetRPC):
         """Append one planned call to a channel queue (caller holds
         _work), applying admission backpressure: a shrunk congestion
         window bounds the backlog a producer may build before it blocks.
-        Handlers (any thread inside a pipeline) are exempt: they hold the
-        plane lock the draining thread would need, so waiting deadlocks.
-        """
+        Workers and handlers (any thread inside a pipeline) are exempt:
+        they hold locks a draining thread would need, so waiting
+        deadlocks."""
         ch = q.channel
         if (len(q.entries) >= q.backlog_limit
-                and threading.current_thread() is not self._thread
+                and not self._is_worker()
                 and not self._in_pipeline()):
             ch.stats.admission_waits += 1
             while (len(q.entries) >= q.backlog_limit
@@ -201,10 +258,10 @@ class IncRuntime(NetRPC):
         q.entries.append((fut, planned, self._clock()))
         n = len(q.entries)
         ch.stats.note_queue_depth(n)
-        # wake the scheduler only at trigger boundaries — the first
+        # wake the workers only at trigger boundaries — the first
         # entry (arms the time trigger / window check) and the size
-        # threshold. Waking it per enqueue would make every submission
-        # pay a GIL+lock round trip with the drain thread.
+        # threshold. Waking them per enqueue would make every submission
+        # pay a GIL+lock round trip with the drain pool.
         if n == 1 or n == q.policy.max_batch or q.demand:
             self._work.notify_all()
         return fut
@@ -223,7 +280,7 @@ class IncRuntime(NetRPC):
         queue in issue order under one lock round trip, and the same
         size/time/window triggers decide the pipeline batch boundaries.
         Admission backpressure applies per call: once the backlog limit
-        is hit, the submitter blocks mid-list until the scheduler drains
+        is hit, the submitter blocks mid-list until a worker drains
         room, so a huge batch cannot bypass the congestion coupling."""
         ch = stub.channels[method]
         planned = [stub._plan(method, r) for r in requests]
@@ -243,18 +300,18 @@ class IncRuntime(NetRPC):
 
     def run_direct(self, stub: Stub, method: str,
                    requests: list[dict]) -> list[dict]:
-        me = threading.current_thread()
-        if me is self._thread or self._in_pipeline():
-            # nested inline call from a server handler (scheduler thread,
-            # or any thread already inside a pipeline pass): never wait on
+        if self._is_worker() or self._in_pipeline():
+            # nested inline call from a server handler (a drain worker, or
+            # any thread already inside a pipeline pass): never wait on
             # busy flags — this thread may own one, and even on another
-            # channel the flag's owner could be blocked on the plane lock
+            # channel the flag's owner could be blocked on a plane lock
             # this thread holds (deadlock cycle) — run the pass directly;
-            # the plane lock is re-entrant
+            # the channel plane locks are re-entrant
             return self._run_plane(
                 lambda: super(IncRuntime, self).run_direct(stub, method,
                                                            requests))
         ch = stub.channels[method]
+        me = threading.current_thread()
         with self._work:
             q = self._queues.get(ch.gaid)
             if q is not None:
@@ -282,6 +339,8 @@ class IncRuntime(NetRPC):
                 q.busy_owner = None
                 if not q.entries:
                     q.demand = False
+                    q.deficit = 0.0    # classic DRR: credit/debt is only
+                    #                    meaningful while backlogged
                 self._work.notify_all()
 
     def drain(self) -> int:
@@ -291,7 +350,7 @@ class IncRuntime(NetRPC):
         IncFutures first; the first one is re-raised after every channel
         has been flushed.
         """
-        if threading.current_thread() is self._thread or self._in_pipeline():
+        if self._is_worker() or self._in_pipeline():
             # same cycle either way: an inline pass marks its channel busy
             # before running handlers, so a handler's drain() would wait
             # forever on a busy flag owned by its own (blocked) thread
@@ -318,10 +377,16 @@ class IncRuntime(NetRPC):
                 with self._work:
                     q.busy_owner = None
                     q.demand = False
+                    if not q.entries:
+                        q.deficit = 0.0
                     self._work.notify_all()
             n += sum(1 for _, p, _ in backlog if p.completed)
             first_exc = first_exc or exc
-        n += self._run_plane(super().drain)   # base-class ch.pending queues
+        # base-class ch.pending queues (legacy submit tickets): the plain
+        # delegation still works because each channel's pipeline pass
+        # takes its own plane lock inside _run_pipeline; _run_plane only
+        # marks the thread in-pipeline for the nested-handler guards
+        n += self._run_plane(super().drain)
         if first_exc is not None:
             raise first_exc
         return n
@@ -329,9 +394,10 @@ class IncRuntime(NetRPC):
     # -- lifecycle -----------------------------------------------------------
 
     def close(self, flush: bool = True) -> None:
-        """Stop the scheduler; by default flush outstanding work first.
-        Queued-but-unflushed futures (flush=False) resolve to an error."""
-        if flush:
+        """Stop the worker pool; by default flush outstanding work first.
+        Queued-but-unflushed futures (flush=False) resolve to an error.
+        Idempotent: closing an already-closed runtime is a no-op."""
+        if flush and not self._closed:
             try:
                 self.drain()
             except BaseException:
@@ -347,9 +413,9 @@ class IncRuntime(NetRPC):
             self._work.notify_all()
         for fut, _, _ in leftovers:
             fut.set_exception(RuntimeError("runtime closed before drain"))
-        if self._thread is not None:
-            self._thread.join(timeout=5.0)
-            self._thread = None
+        threads, self._threads = self._threads, []
+        for t in threads:
+            t.join(timeout=5.0)
 
     def __enter__(self) -> "IncRuntime":
         return self
@@ -360,39 +426,70 @@ class IncRuntime(NetRPC):
     # -- observability -------------------------------------------------------
 
     def scheduling_report(self) -> dict:
-        """Per-GAID scheduling behavior of the multi-tenant plane.
+        """Scheduling behavior of the multi-tenant plane.
+
+        One entry per application (keyed by AppName) with that channel's
+        coalescing/queue/GPV counters plus its scheduling class
+        (priority, weight, DRR deficit, drain-wait stats), and a reserved
+        ``"__plane__"`` entry aggregating the worker pool: per-worker
+        drain/call/steal counters, per-priority drain counts and wait
+        times, and the pick-contention count.
 
         Also audits the stats split: every pipeline pass is attributed to
         exactly one source, so ``drained + explicit == total`` must hold
         for calls and batches — a double-count (or a new entry point that
         forgot its attribution) raises here rather than silently skewing
         the coalescing-efficiency numbers this report exists to expose.
-        The plane lock is taken first (the established _plane -> _work
-        order, re-entrant for handlers): the per-pass counters mutate
+        Each channel is audited under its own plane lock (taken before
+        _work — the established order): the per-pass counters mutate
         under it mid-pipeline, so auditing without it could observe a
         half-updated split and raise spuriously.
         """
         out = {}
-        with self._plane, self._work:
-            for gaid, q in self._queues.items():
-                st = q.channel.stats
-                st.check_consistent()
-                out[q.channel.netfilter.app_name] = {
-                    "gaid": gaid,
-                    "queue_depth": len(q.entries),
-                    "max_queue_depth": st.max_queue_depth,
-                    "cw": q.aimd.cw,
-                    "occupancy": round(q.occupancy, 1),
-                    "drains": dict(st.drain_triggers),
-                    "calls": st.calls,
-                    "explicit_calls": st.explicit_calls,
-                    "drained_calls": st.drained_calls,
-                    "drained_batches": st.drained_batches,
-                    "mean_drained_batch": round(st.mean_drained_batch, 2),
-                    "admission_waits": st.admission_waits,
-                    "gpv_calls": st.gpv_calls,
-                    "gpv_elems": st.gpv_elems,
-                }
+        with self._work:
+            queues = list(self._queues.items())
+        for gaid, q in queues:
+            with q.channel.plane:
+                with self._work:
+                    st = q.channel.stats
+                    st.check_consistent()
+                    drains, wait_sum, wait_max = q.drain_waits
+                    out[q.channel.netfilter.app_name] = {
+                        "gaid": gaid,
+                        "queue_depth": len(q.entries),
+                        "max_queue_depth": st.max_queue_depth,
+                        "cw": q.aimd.cw,
+                        "occupancy": round(q.occupancy, 1),
+                        "drains": dict(st.drain_triggers),
+                        "calls": st.calls,
+                        "explicit_calls": st.explicit_calls,
+                        "drained_calls": st.drained_calls,
+                        "drained_batches": st.drained_batches,
+                        "mean_drained_batch": round(st.mean_drained_batch,
+                                                    2),
+                        "admission_waits": st.admission_waits,
+                        "gpv_calls": st.gpv_calls,
+                        "gpv_elems": st.gpv_elems,
+                        "priority": q.policy.priority,
+                        "weight": q.policy.weight,
+                        "deficit": round(q.deficit, 2),
+                        "mean_drain_wait_us": round(
+                            wait_sum / drains * 1e6, 1) if drains else 0.0,
+                        "max_drain_wait_us": round(wait_max * 1e6, 1),
+                    }
+        with self._work:
+            out["__plane__"] = {
+                "workers": {f"w{i}": dict(s)
+                            for i, s in enumerate(self._worker_stats)},
+                "priorities": {
+                    p: {"drains": s["drains"], "calls": s["calls"],
+                        "mean_wait_us": round(
+                            s["wait_sum"] / s["drains"] * 1e6, 1)
+                        if s["drains"] else 0.0,
+                        "max_wait_us": round(s["wait_max"] * 1e6, 1)}
+                    for p, s in sorted(self._prio_stats.items())},
+                "pick_contention": self._pick_contention,
+            }
         return out
 
     # -- scheduler internals -------------------------------------------------
@@ -400,8 +497,7 @@ class IncRuntime(NetRPC):
     def _demand(self, gaid: int) -> None:
         """IncFuture.result() on an unresolved future: flush its channel
         now instead of waiting out the time trigger."""
-        if (threading.current_thread() is self._thread
-                or self._in_pipeline()):
+        if self._is_worker() or self._in_pipeline():
             raise RuntimeError(
                 "IncFuture.result() inside a server handler would deadlock "
                 "the data plane; handlers must not wait on futures")
@@ -417,10 +513,12 @@ class IncRuntime(NetRPC):
         q.last_service = now
         q.occupancy = max(0.0, q.occupancy - dt * q.policy.service_rate)
 
-    def _due(self, q: _ChannelQueue, now: float):
-        """(trigger, take) if this queue should drain now, else None."""
+    def _due(self, q: _ChannelQueue, now: float, ignore_busy: bool = False):
+        """(trigger, take) if this queue should drain now, else None.
+        ``ignore_busy`` evaluates due-ness for an already-claimed queue —
+        only the contention accounting in _pick uses it."""
         n = len(q.entries)
-        if n == 0 or q.busy_owner is not None:
+        if n == 0 or (q.busy_owner is not None and not ignore_busy):
             return None
         room = q.room()
         take = min(n, q.policy.max_batch, room)
@@ -434,6 +532,53 @@ class IncRuntime(NetRPC):
         if q.policy.eager_window and n <= room:
             return ("window", n)
         return None
+
+    def _pick(self, now: float):
+        """Weighted-fair choice among drain-eligible channels (caller
+        holds _work): strict-priority tiers, deficit-round-robin within
+        the winning tier. Returns (queue, trigger, take) or None; adjusts
+        the DRR deficits (the pick pays its take immediately — the caller
+        must claim and execute the batch it was handed)."""
+        due = []
+        busy_due = False
+        for q in self._queues.values():
+            if not q.entries:
+                continue
+            self._service(q, now)
+            if q.busy_owner is not None:
+                # claimed by another worker; due-ness (ignoring the
+                # claim) feeds the contention signal below
+                busy_due = busy_due or \
+                    self._due(q, now, ignore_busy=True) is not None
+                continue
+            hit = self._due(q, now)
+            if hit is not None:
+                due.append((q, hit))
+        if not due:
+            if busy_due:
+                # every channel with drainable work is claimed by another
+                # worker: this picker goes hungry (the contention signal
+                # that says more channels — not more workers — is the
+                # scaling lever)
+                self._pick_contention += 1
+            return None
+        top = max(q.policy.priority for q, _ in due)
+        tier = [(q, hit) for q, hit in due if q.policy.priority == top]
+        # DRR: every ready channel in the serviced tier earns its weight;
+        # the largest deficit wins (FIFO on ties) and pays its take, so
+        # long-run drained calls are proportional to weight. Deficits are
+        # clamped symmetrically: the cap stops a rarely-picked channel
+        # banking unbounded credit, the floor stops a channel that drained
+        # alone (paying take with nobody to share with) banking unbounded
+        # DEBT it would pay off by starving once a sibling joins the tier
+        for q, _ in tier:
+            cap = _DEFICIT_CAP_BATCHES * q.policy.max_batch * q.policy.weight
+            q.deficit = min(q.deficit + q.policy.weight, cap)
+        q, (trigger, take) = max(
+            tier, key=lambda qh: (qh[0].deficit, -qh[0].entries[0][2]))
+        cap = _DEFICIT_CAP_BATCHES * q.policy.max_batch * q.policy.weight
+        q.deficit = max(q.deficit - take, -cap)
+        return q, trigger, take
 
     def _next_wake(self, now: float) -> float | None:
         """Seconds until the earliest time trigger or window-room event."""
@@ -454,7 +599,9 @@ class IncRuntime(NetRPC):
             return None
         return max(best, 1e-4)
 
-    def _loop(self) -> None:
+    def _loop(self, wid: int) -> None:
+        self._tls.worker = True
+        stats = self._worker_stats[wid]
         while True:
             with self._work:
                 due = None
@@ -462,36 +609,51 @@ class IncRuntime(NetRPC):
                     if self._closed:
                         return
                     now = self._clock()
-                    for q in sorted((q for q in self._queues.values()
-                                     if q.entries and q.busy_owner is None),
-                                    key=lambda q: q.entries[0][2]):
-                        self._service(q, now)
-                        hit = self._due(q, now)
-                        if hit is not None:
-                            due = (q, *hit)
-                            break
+                    due = self._pick(now)
                     if due is None:
                         self._work.wait(self._next_wake(now))
                 q, trigger, take = due
                 batch = [q.entries.popleft() for _ in range(take)]
                 q.busy_owner = threading.current_thread()
+                if q.last_worker is not None and q.last_worker != wid:
+                    stats["steals"] += 1
+                q.last_worker = wid
+                stats["drains"] += 1
+                stats["calls"] += len(batch)
+                # queue-wait accounting (per channel and per priority
+                # tier): age of the batch's oldest entry at pick time
+                wait = max(0.0, now - batch[0][2])
+                q.drain_waits[0] += 1
+                q.drain_waits[1] += wait
+                q.drain_waits[2] = max(q.drain_waits[2], wait)
+                ps = self._prio_stats.setdefault(
+                    q.policy.priority,
+                    {"drains": 0, "calls": 0, "wait_sum": 0.0,
+                     "wait_max": 0.0})
+                ps["drains"] += 1
+                ps["calls"] += len(batch)
+                ps["wait_sum"] += wait
+                ps["wait_max"] = max(ps["wait_max"], wait)
                 q.channel.stats.note_queue_depth(len(q.entries))
             try:
                 self._execute(q, batch, trigger)
             except BaseException:
-                # futures carry the call outcome; nothing here may kill the
-                # scheduler thread (producers block on it for admission)
+                # futures carry the call outcome; nothing here may kill a
+                # drain worker (producers block on the pool for admission)
                 pass
             finally:
                 with self._work:
                     q.busy_owner = None
                     if not q.entries:
                         q.demand = False
+                        q.deficit = 0.0
                     self._work.notify_all()
 
     def _execute(self, q: _ChannelQueue, entries, trigger: str):
         """One pipeline pass for ``entries``; resolves futures; returns the
-        pipeline exception (already delivered to futures) or None."""
+        pipeline exception (already delivered to futures) or None. Runs
+        under the channel's plane lock (acquired inside _run_pipeline), so
+        passes for other channels proceed concurrently."""
         ch = q.channel
         exc = None
         t_start = self._clock()
@@ -511,11 +673,13 @@ class IncRuntime(NetRPC):
             self._service(q, self._clock())
             # one ACK per batch; ECN set iff the simulated ingress queue is
             # above threshold (persisted implicitly: occupancy only decays
-            # through service, as the transport persists ECN in the map)
+            # through service, as the transport persists ECN in the map).
+            # AIMD state is per channel and only ever touched under _work,
+            # so concurrent drains on other channels cannot race it.
             q.aimd.on_ack(q.occupancy >= q.policy.ecn_threshold)
             q.backlog_limit = q.policy.backlog_limit(q.aimd.cw)
             ch.stats.note_trigger(trigger)
-        # the scheduler loop deliberately swallows the return value, so
+        # the worker loop deliberately swallows the return value, so
         # the outcome (including a trailing-flush failure, charged to the
         # last call) must be fully delivered through the futures
         resolve_futures([(fut, p) for fut, p, _ in entries], exc)

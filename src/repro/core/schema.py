@@ -215,14 +215,51 @@ class _RpcOptions:
     #                                 avoid importing core.runtime here)
 
 
+def _merge_sched(drain, priority, weight, ctx: str):
+    """Fold ``priority=``/``weight=`` shorthands into the (possibly
+    absent) DrainPolicy override — the scheduling-class annotation of the
+    weighted-fair drain loop (core/runtime.py). Imported lazily so this
+    module keeps no module-level dependency on core.runtime."""
+    if priority is None and weight is None:
+        return drain
+    from repro.core.runtime import DrainPolicy
+    kw = {}
+    if priority is not None:
+        if not isinstance(priority, int) or isinstance(priority, bool):
+            raise SchemaError(f"{ctx}: priority must be an int (strict "
+                              f"drain tier; higher drains first), got "
+                              f"{priority!r}")
+        kw["priority"] = priority
+    if weight is not None:
+        try:
+            weight = float(weight)
+        except (TypeError, ValueError):
+            weight = -1.0
+        if not (weight > 0):       # also rejects NaN, which compares False
+            raise SchemaError(f"{ctx}: weight must be a number > 0 (the "
+                              f"DRR share within the priority tier)")
+        kw["weight"] = weight
+    if drain is None:
+        return DrainPolicy(**kw)
+    if not isinstance(drain, DrainPolicy):
+        raise SchemaError(f"{ctx}: drain must be an inc.DrainPolicy to "
+                          f"combine with priority=/weight=, got {drain!r}")
+    return replace(drain, **kw)
+
+
 def rpc(fn=None, *, app: str | None = None, request_msg: str | None = None,
         reply_msg: str | None = None, cnt_fwd: CntFwd | None = None,
-        drain=None):
+        drain=None, priority: int | None = None,
+        weight: float | None = None):
     """Mark a schema-class method as an RPC.  Usable bare (``@inc.rpc``)
-    or configured (``@inc.rpc(cnt_fwd=..., request_msg=...)``)."""
+    or configured (``@inc.rpc(cnt_fwd=..., request_msg=...)``).
+    ``priority=``/``weight=`` are scheduling-class shorthands: they place
+    the RPC's channel in the weighted-fair drain loop (strict tiers, DRR
+    within a tier) without spelling a full DrainPolicy."""
     if cnt_fwd is not None and not isinstance(cnt_fwd, CntFwd):
         raise SchemaError(f"@rpc: cnt_fwd must be an inc.CntFwd, "
                           f"got {cnt_fwd!r}")
+    drain = _merge_sched(drain, priority, weight, "@rpc")
     opts = _RpcOptions(app=app, request_msg=request_msg,
                        reply_msg=reply_msg, cnt_fwd=cnt_fwd, drain=drain)
 
@@ -269,11 +306,16 @@ class ServiceSchema:
 
 
 def service(cls=None, *, app: str | None = None, name: str | None = None,
-            drain=None):
+            drain=None, priority: int | None = None,
+            weight: float | None = None):
     """Class decorator: compile the annotated class into a ServiceSchema
     (attached as ``__inc_schema__``) and return the class.  ``app`` is the
     default AppName for every RPC (override per-RPC); ``drain`` the
-    default DrainPolicy override for the service's channels."""
+    default DrainPolicy override for the service's channels;
+    ``priority=``/``weight=`` the scheduling-class shorthands (see
+    :func:`rpc`)."""
+    drain = _merge_sched(drain, priority, weight, "@service")
+
     def deco(c):
         schema = compile_service(c, default_app=app,
                                  name=name or c.__name__,

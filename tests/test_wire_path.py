@@ -414,3 +414,122 @@ def test_dense_table_grows_and_caches(gpv_on):
     assert b.tolist() == list(range(16))
     # plain int keys are identity-canonical: no collision with the table
     assert cl.logical(5) == 5
+
+
+# ---- pure-query (ReadMostly) array requests (ISSUE 5 satellite) -------------
+
+@inc.service(app="WPRQ-1")
+class ReadSvc:
+    @inc.rpc(request_msg="Accum")
+    def Accum(self, tensor: inc.Agg[inc.FPArray](precision=4)): ...
+
+    @inc.rpc(request_msg="FetchReq", reply_msg="FetchReply")
+    def Fetch(self, tensor: inc.ReadMostly[inc.FPArray](precision=4)): ...
+
+
+def test_pure_query_array_rides_gpv_path(gpv_on):
+    rt = NetRPC()
+    stub = rt.make_stub(ReadSvc, n_slots=64)
+    g = np.arange(12, dtype=np.float32).reshape(3, 4) / 8
+    stub.Accum(tensor=g).result()
+    stub.Accum(tensor=g).result()
+    ch = stub.channels["Fetch"]
+    before = (ch.stats.gpv_calls, ch.stats.gpv_elems)
+    out = stub.Fetch(tensor=np.zeros((3, 4), np.float32)).result()["tensor"]
+    # ndarray reply, request-shaped, and the query itself counted as GPV
+    assert isinstance(out, np.ndarray) and out.shape == (3, 4)
+    np.testing.assert_allclose(out, 2 * g, atol=1e-3)
+    assert ch.stats.gpv_calls == before[0] + 1
+    assert ch.stats.gpv_elems == before[1] + 12
+
+
+@settings(max_examples=10)
+@given(st.integers(1, 24), st.integers(0, 4),
+       st.lists(st.floats(-100.0, 100.0), min_size=1, max_size=24))
+def test_pure_query_gpv_equals_dict_reference(n, precision, xs):
+    """Array-shaped ReadMostly requests: the TensorSegment read must be
+    element-identical to the {i: x} dict reference path (REPRO_GPV=0),
+    including accumulated state from prior array writes."""
+    arr = np.array((xs * ((n // len(xs)) + 1))[:n], np.float64)
+
+    @inc.service(app="WPRQ-prop")
+    class Svc:
+        @inc.rpc(request_msg="Accum")
+        def Accum(self, tensor: inc.Agg[inc.FPArray](
+            precision=precision)): ...
+
+        @inc.rpc(request_msg="F", reply_msg="FR")
+        def Fetch(self, tensor: inc.ReadMostly[inc.FPArray](
+            precision=precision)): ...
+
+    legs = {}
+    for gpv in (True, False):
+        prev = rpc_mod.set_gpv(gpv)
+        try:
+            rt = NetRPC()
+            stub = rt.make_stub(Svc, n_slots=64)
+            stub.Accum(tensor=arr).result()
+            stub.Accum(tensor=-2 * arr).result()
+            out = stub.Fetch(tensor=np.zeros(n)).result()["tensor"]
+            vals = (out.tolist() if isinstance(out, np.ndarray)
+                    else [out[i] for i in range(n)])
+            legs[gpv] = vals
+            assert (stub.channels["Fetch"].stats.gpv_calls > 0) == gpv
+        finally:
+            rpc_mod.set_gpv(prev)
+    assert legs[True] == legs[False]
+
+
+def test_pure_query_dict_request_still_dict_everywhere(gpv_on):
+    """A dict-keyed query keeps the historical dict path and reply even
+    with GPV on (explicit key maps are not dense tensors)."""
+    rt = NetRPC()
+    stub = rt.make_stub(ReadSvc, n_slots=64)
+    stub.Accum(tensor=np.array([1.0, 2.0, 3.0])).result()
+    out = stub.Fetch(tensor={0: 0, 2: 0}).result()["tensor"]
+    assert isinstance(out, dict)
+    assert out == {0: 1.0, 2: 3.0}
+    assert stub.channels["Fetch"].stats.gpv_calls == 1   # the Accum only
+
+
+def test_pure_query_clear_applies_once(gpv_on):
+    """Get+clear on an array-shaped pure query: the read returns the
+    accumulated values and the buffered clear empties the map exactly
+    once (no double-decrement), matching the dict reference."""
+
+    @inc.service(app="WPRQ-clr")
+    class Svc:
+        @inc.rpc(request_msg="Accum")
+        def Accum(self, tensor: inc.Agg[inc.FPArray](precision=2)): ...
+
+        @inc.rpc(request_msg="F", reply_msg="FR")
+        def Drain(self, tensor: inc.ReadMostly[inc.FPArray](
+            precision=2, clear="copy")): ...
+
+    rt = NetRPC()
+    stub = rt.make_stub(Svc, n_slots=64)
+    g = np.array([1.25, -2.5, 3.75])
+    stub.Accum(tensor=g).result()
+    first = stub.Drain(tensor=np.zeros(3)).result()["tensor"]
+    np.testing.assert_allclose(first, g, atol=1e-2)
+    second = stub.Drain(tensor=np.zeros(3)).result()["tensor"]
+    np.testing.assert_allclose(second, np.zeros(3))
+
+
+def test_pure_query_empty_array_matches_dict_fallback(gpv_on):
+    """A zero-length query array must behave like an empty dict on BOTH
+    legs: fall back to dumping every spilled key, not silently return an
+    empty GPV reply (the n=0 edge of GPV==dict)."""
+    legs = {}
+    for gpv in (True, False):
+        prev = rpc_mod.set_gpv(gpv)
+        try:
+            rt = NetRPC()
+            stub = rt.make_stub(ReadSvc, n_slots=0)   # no switch slots:
+            stub.Accum(tensor={"spilled": 7.0}).result()   # -> host spill
+            out = stub.Fetch(tensor=np.zeros(0)).result()["tensor"]
+            legs[gpv] = out
+        finally:
+            rpc_mod.set_gpv(prev)
+    assert legs[True] == legs[False]
+    assert legs[True]                     # the spill dump, not {}
