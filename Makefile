@@ -2,7 +2,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast examples bench-batch bench-async bench-wire \
-	bench-shard
+	bench-shard bench-device
 
 # full tier-1 suite (includes the slow multidevice subprocess tests)
 test:
@@ -34,3 +34,7 @@ bench-wire:
 # sharded-plane sweep: M channels x workers in {1,2,4}, weighted fairness
 bench-shard:
 	python benchmarks/multi_channel.py --csv
+
+# device-resident GPV sweep: fused Pallas addto/read vs the host path
+bench-device:
+	python benchmarks/device_path.py --csv

@@ -74,6 +74,19 @@ fi
 rm -f "$smoke_log"
 echo "multi_channel smoke: OK"
 
+# smoke the device-resident GPV benchmark (tiny sizes; includes the
+# dict-vs-device correctness probe, so a fused-kernel or dequant-contract
+# divergence fails CI here, interpret or compiled alike)
+smoke_log=$(mktemp)
+if ! timeout 300 python -m benchmarks.device_path --smoke > "$smoke_log" 2>&1; then
+    echo "FAST LANE: FAIL (device_path smoke); output:"
+    cat "$smoke_log"
+    rm -f "$smoke_log"
+    exit 1
+fi
+rm -f "$smoke_log"
+echo "device_path smoke: OK"
+
 # bench trajectory export: every BENCH_*.json must parse and carry the
 # (bench, config, rows, acceptance) shape. The three benches smoked above
 # write gitignored BENCH_smoke_*.json (so the committed full-run
@@ -94,13 +107,13 @@ for f in files:
     for key in ("bench", "config", "rows", "acceptance"):
         assert key in d, f"{f}: missing {key!r}"
     assert isinstance(d["rows"], list) and d["rows"], f"{f}: empty rows"
-for name in ("async_latency", "wire_path", "multi_channel"):
+for name in ("async_latency", "wire_path", "multi_channel", "device_path"):
     f = pathlib.Path(f"benchmarks/BENCH_smoke_{name}.json")
     assert f.exists(), f"{f}: the smoked bench exported nothing"
     assert f.stat().st_mtime >= stamp, \
         f"{f}: stale — this lane's smoke did not rewrite it"
 print(f"bench trajectory: {len(files)} BENCH_*.json parse OK, "
-      f"3 smoke exports fresh")
+      f"4 smoke exports fresh")
 EOF
 then
     echo "FAST LANE: FAIL (BENCH_*.json export)"

@@ -175,11 +175,13 @@ class Controller:
     # -- registration -------------------------------------------------------
 
     def register(self, nf: NetFilter, n_slots: int = 4096,
-                 cache_policy: str = "netrpc-lru") -> Channel:
+                 cache_policy: str = "netrpc-lru",
+                 device: bool = False) -> Channel:
         if nf.app_name in self.by_name:
             raise ValueError(f"app {nf.app_name!r} already registered")
         gaid = next(self._gaids)
-        server = ServerAgent(self.switch, gaid, n_slots, policy=cache_policy)
+        server = ServerAgent(self.switch, gaid, n_slots, policy=cache_policy,
+                             device=device)
         ch = Channel(gaid, nf, server, self)
         self.channels[gaid] = ch
         self.by_name[nf.app_name] = gaid

@@ -206,10 +206,30 @@ class Segment:
     n_slots: int
     regs: jnp.ndarray = None
     lock: threading.Lock = field(default_factory=threading.Lock)
+    # class attr, not a dataclass field: flipped by promotion (see
+    # DeviceSegment) without changing the constructor signature
+    device = False
 
     def __post_init__(self):
         if self.regs is None:
             self.regs = ops.zeros_regs(self.n_slots)
+
+
+@dataclass
+class DeviceSegment(Segment):
+    """A register segment whose ``regs`` live on device as a jax int32
+    array for its whole lifetime: updates run the fused Pallas lanes
+    (ops.device_addto_*) and reads hand back jax arrays without a host
+    round trip. Host segments are *promoted* in place (``__class__``
+    rewrite under ``lock`` — identity and lock object are preserved, so
+    in-flight lock holders and cross-references stay valid)."""
+    device = True
+
+    def __post_init__(self):
+        if self.regs is None:
+            self.regs = ops.zeros_regs(self.n_slots, device=True)
+        elif not isinstance(self.regs, jnp.ndarray):
+            self.regs = jnp.asarray(np.asarray(self.regs), jnp.int32)
 
 
 class SwitchMemory:
@@ -231,16 +251,39 @@ class SwitchMemory:
     def total_slots(self) -> int:
         return self.n_segments * self.seg_slots
 
-    def reserve(self, gaid: int, n_slots: int) -> bool:
-        """FCFS partition reservation at app registration (§5.2.2)."""
+    def reserve(self, gaid: int, n_slots: int, device: bool = False) -> bool:
+        """FCFS partition reservation at app registration (§5.2.2).
+
+        ``device=True`` additionally promotes every segment the partition
+        touches to device residency (idempotent; a segment shared with a
+        host partition still serves that partition — the int paths work on
+        both flavors)."""
         with self._alloc_lock:
             if gaid in self.partitions:
+                if device:
+                    self._promote(*self.partitions[gaid])
                 return True
             if self._next_free + n_slots > self.total_slots:
                 return False
             self.partitions[gaid] = (self._next_free, n_slots)
             self._next_free += n_slots
+            if device:
+                self._promote(self._next_free - n_slots, n_slots)
             return True
+
+    def _promote(self, start: int, n_slots: int) -> None:
+        """Make every segment covering physical range [start, start+n)
+        device-resident, in place (caller holds _alloc_lock)."""
+        if n_slots <= 0:
+            return
+        lo = start // self.seg_slots
+        hi = (start + n_slots - 1) // self.seg_slots
+        for s in range(lo, hi + 1):
+            seg = self.segments[s]
+            with seg.lock:
+                if not seg.device:
+                    seg.__class__ = DeviceSegment
+                    seg.regs = jnp.asarray(np.asarray(seg.regs), jnp.int32)
 
     def release(self, gaid: int) -> None:
         # partitions are compacted lazily; released ranges are re-usable
@@ -277,9 +320,70 @@ class SwitchMemory:
         for s, m in self._seg_groups(seg_ix):
             seg = self.segments[s]
             with seg.lock:
-                seg.regs = ops.sparse_addto_bucketed(
-                    seg.regs, np.asarray(off[m], np.int32),
-                    np.asarray(vals[m], np.int32))
+                if seg.device:
+                    seg.regs = ops.device_addto_int(
+                        seg.regs, np.asarray(off[m], np.int32),
+                        np.asarray(vals[m], np.int32))
+                else:
+                    seg.regs = ops.sparse_addto_bucketed(
+                        seg.regs, np.asarray(off[m], np.int32),
+                        np.asarray(vals[m], np.int32))
+
+    def addto_f32(self, phys: np.ndarray, fvals: np.ndarray, scale) -> None:
+        """Fused quantize + saturating scatter-add of an fp32 update
+        stream — the device-resident transmit verb. Contiguous per-segment
+        runs (the dense GPV tensor case) lower to one fused slice-add
+        kernel; anything else (gaps, duplicates) to the fused serial
+        scatter, which matches the sequential oracle exactly. Non-device
+        segments quantize on host and take the int path (robustness only;
+        the agent routes f32 streams here just for device partitions)."""
+        seg_ix, off = self._locate(np.asarray(phys))
+        if not len(seg_ix):
+            return
+        fvals = np.asarray(fvals, np.float32)
+        for s, m in self._seg_groups(seg_ix):
+            seg = self.segments[s]
+            o = np.asarray(off[m], np.int32)
+            with seg.lock:
+                if not seg.device:
+                    seg.regs = ops.sparse_addto_bucketed(
+                        seg.regs, o,
+                        quantize_stream(fvals[m], scale).astype(np.int32))
+                elif len(o) and (len(o) == 1 or bool((np.diff(o) == 1).all())):
+                    seg.regs = ops.device_addto_dense(
+                        seg.regs, int(o[0]), jnp.asarray(fvals[m]), scale)
+                else:
+                    seg.regs = ops.device_addto_scatter(
+                        seg.regs, o, jnp.asarray(fvals[m]), scale)
+
+    def read_f32(self, phys: np.ndarray, scale, need_raw: bool = False
+                 ) -> tuple[jnp.ndarray, np.ndarray | None]:
+        """Fused gather + dequantize read -> (fp32 jax values, raw int
+        registers as numpy when ``need_raw``). The single-segment
+        contiguous case (a dense GPV tensor reply) is one fused kernel;
+        the general case gathers via ``get`` and dequantizes with the
+        same reciprocal formula, so both flavors are bit-identical."""
+        n = len(phys)
+        if n == 0:
+            empty_raw = np.zeros(0, np.int32) if need_raw else None
+            return jnp.zeros(0, jnp.float32), empty_raw
+        seg_ix, off = self._locate(np.asarray(phys))
+        if int(seg_ix[0]) == int(seg_ix[-1]):
+            seg = self.segments[int(seg_ix[0])]
+            o = np.asarray(off, np.int64)
+            if seg.device and (n == 1 or bool((np.diff(o) == 1).all())):
+                with seg.lock:
+                    vals, _ = ops.device_read_dense(
+                        seg.regs, int(o[0]), n, scale)
+                    raw = None
+                    if need_raw:
+                        raw = np.asarray(
+                            seg.regs[int(o[0]):int(o[0]) + n], np.int32)
+                return vals, raw
+        raw = self.get(phys)
+        inv = np.float32(1.0) / np.float32(scale)
+        vals = jnp.asarray(raw.astype(np.float32) * inv)
+        return vals, (raw if need_raw else None)
 
     def get(self, phys: np.ndarray) -> np.ndarray:
         # reads take the segment lock too: the host-path kernel updates
@@ -334,13 +438,17 @@ class ServerAgent:
 
     def __init__(self, switch: SwitchMemory, gaid: int, n_slots: int,
                  policy: str = "netrpc-lru", pon_threshold: int = 4,
-                 window: int = 1024):
+                 window: int = 1024, device: bool = False):
         assert policy in CACHE_POLICIES, policy
         self.switch = switch
         self.gaid = gaid
         self.policy = policy
         self.pon_threshold = pon_threshold
         self.window = window
+        # device-resident partition: f32 update/read streams take the
+        # fused quantize/dequantize Pallas lanes (addto_batch_f32 /
+        # read_batch_dev) instead of host-quantizing first
+        self.device = device
         # per-instance lock (sharded data plane): an agent belongs to one
         # channel, whose pipeline passes are already serialized by the
         # channel plane lock — this lock additionally makes direct agent
@@ -348,7 +456,7 @@ class ServerAgent:
         # a drain running concurrently on another thread. Re-entrant:
         # data-path methods call each other (read -> read_batch).
         self.lock = threading.RLock()
-        self.granted = switch.reserve(gaid, n_slots)
+        self.granted = switch.reserve(gaid, n_slots, device=device)
         self.base, self.capacity = (switch.partitions.get(gaid, (0, 0)))
         self.mapping: dict[int, int] = _VersionedDict()  # logical -> physical
         self.free: list[int] = list(range(self.capacity - 1, -1, -1))
@@ -507,28 +615,105 @@ class ServerAgent:
             self.switch.addto(phys, v32)
             self.hits += n_hit
             self.inc_bytes += n_hit * 8
-        # host path (miss): server agent software map + maybe grant mapping.
-        # Duplicates fold to one spill write and one grant probe per key —
-        # behavior-identical to the per-occurrence loop because the window
-        # counters only advance after this batch, so every occurrence saw
-        # the same grant decision anyway.
+        # host path (miss): server agent software map + maybe grant mapping
         if n_hit < n:
             miss = ~hit
-            n_miss = n - n_hit
-            keys_f, _, sums_f = ops.fold_stream_host(logical[miss],
-                                                     vals[miss])
-            self.misses += n_miss
-            self.host_bytes += 8 * n_miss
-            spill = self.spill
-            for l, v in zip(keys_f.tolist(), sums_f.tolist()):
-                spill[l] += v
-                self._maybe_grant(l)
-        # usage accounting for the periodic LRU
+            self._route_miss(logical[miss], vals[miss])
+        self._account(logical, n)
+
+    def _route_miss(self, lmiss: np.ndarray, vmiss: np.ndarray) -> None:
+        """Fold missed (logical, value) updates into the host spill and
+        probe the grant policy once per distinct key. Duplicates fold to
+        one spill write and one grant probe per key — behavior-identical
+        to the per-occurrence loop because the window counters only
+        advance after this batch, so every occurrence saw the same grant
+        decision anyway."""
+        n_miss = len(lmiss)
+        keys_f, _, sums_f = ops.fold_stream_host(lmiss, vmiss)
+        self.misses += n_miss
+        self.host_bytes += 8 * n_miss
+        spill = self.spill
+        for l, v in zip(keys_f.tolist(), sums_f.tolist()):
+            spill[l] += v
+            self._maybe_grant(l)
+
+    def _account(self, logical: np.ndarray, n: int) -> None:
+        """Per-batch usage accounting for the periodic LRU + migration
+        flush — the shared tail of the int and f32 addto lanes."""
         wkeys, wcnt, _ = ops.fold_stream_host(logical)
         self._note_window(wkeys, wcnt, n)
         if self.seen_this_window >= self.window:
             self.end_window()
         self._flush_migrations()
+
+    @_locked
+    def addto_batch_f32(self, logical: np.ndarray, fvals: np.ndarray,
+                        scale) -> None:
+        """The device-resident transmit lane: route an fp32 update stream
+        so mapped addresses reach the switch *unquantized* and quantize
+        inside the fused Pallas kernel; only misses (spill-bound) quantize
+        on host. Stats/policy behavior is identical to
+        ``addto_batch(logical, quantize_stream(fvals, scale))`` — which is
+        exactly what a non-device agent falls back to."""
+        if not self.device:
+            self.addto_batch(logical,
+                             quantize_stream(np.asarray(fvals), scale))
+            return
+        logical = np.asarray(logical, np.uint32)
+        fvals = np.asarray(fvals, np.float32)
+        n = len(logical)
+        if n == 0:
+            return
+        q = logical.astype(np.int64)
+        hit, slotv = self._map_lookup(q)
+        n_hit = int(hit.sum())
+        if n_hit:
+            if n_hit == n:
+                phys, fv = self.base + slotv, fvals
+            else:
+                phys, fv = self.base + slotv[hit], fvals[hit]
+            self.switch.addto_f32(phys, fv, scale)
+            self.hits += n_hit
+            self.inc_bytes += n_hit * 8
+        if n_hit < n:
+            miss = ~hit
+            self._route_miss(logical[miss],
+                             quantize_stream(fvals[miss], scale))
+        self._account(logical, n)
+
+    @_locked
+    def read_batch_dev(self, logical: np.ndarray, scale,
+                       need_raw: bool = False
+                       ) -> tuple[jnp.ndarray, np.ndarray | None]:
+        """The device-resident receive lane: batched Map.get returning
+        dequantized fp32 values as a jax array (plus the raw int64
+        registers when the caller must write back a clear). The all-hit /
+        no-spill case — the steady dense-tensor regime — is one fused
+        gather+dequantize kernel; any spill or miss falls back to the
+        exact int64 assembly of ``read_batch`` with the same reciprocal
+        dequant formula, so both flavors agree bit-for-bit."""
+        logical = np.asarray(logical, np.uint32)
+        n = len(logical)
+        if n == 0:
+            raw = np.zeros(0, np.int64) if need_raw else None
+            return jnp.zeros(0, jnp.float32), raw
+        q = logical.astype(np.int64)
+        spill_hit = False
+        if self.spill:
+            skeys, _ = self._spill_arrays()
+            ix = np.minimum(np.searchsorted(skeys, q), len(skeys) - 1)
+            spill_hit = bool((skeys[ix] == q).any())
+        if not spill_hit and self.mapping:
+            hit, slotv = self._map_lookup(q)
+            if bool(hit.all()):
+                vals, raw32 = self.switch.read_f32(
+                    self.base + slotv, scale, need_raw=need_raw)
+                raw = raw32.astype(np.int64) if need_raw else None
+                return vals, raw
+        raw = self.read_batch(logical)
+        inv = np.float32(1.0) / np.float32(scale)
+        vals = jnp.asarray(raw.astype(np.float32) * inv)
+        return vals, (raw if need_raw else None)
 
     @_locked
     def spill_host(self, pairs: list[tuple[int, int]]) -> None:
@@ -812,6 +997,29 @@ class ClientAgent:
             keep[m] = False
             return logs[keep], qvals[keep], spills
         return logs, qvals, []
+
+    @_locked
+    def resolve_dense_f32(self, n: int, fdata: np.ndarray, scale
+                          ) -> tuple[np.ndarray, np.ndarray,
+                                     list[tuple[int, int]]]:
+        """Dense index -> address resolution keeping values as raw fp32
+        (the device-resident lane — quantization happens inside the fused
+        switch kernel): returns (logical addrs, fp32 values, collision
+        host-path pairs). Collision elements quantize on host since they
+        ride the spill path. Address routing is identical to
+        ``resolve_dense``; only the value dtype differs."""
+        self._ensure_dense(n)
+        logs = self._dense_log[:n]
+        fdata = np.asarray(fdata, np.float32).reshape(-1)
+        coll = self._dense_coll_arr
+        if len(coll) and coll[0] < n:       # collision host path (rare)
+            m = coll[coll < n]
+            qcoll = quantize_values(fdata[m], scale)
+            spills = list(zip(m.tolist(), qcoll.tolist()))
+            keep = np.ones(n, bool)
+            keep[m] = False
+            return logs[keep], fdata[keep], spills
+        return logs, fdata, []
 
     @_locked
     def resolve(self, kv: dict, precision: int = 0

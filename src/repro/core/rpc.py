@@ -87,7 +87,7 @@ import numpy as np
 
 from repro.core.channel import Channel, Controller
 from repro.core.clear_policy import POLICIES
-from repro.core.inc_map import hash_key, quantize_values
+from repro.core.inc_map import hash_key, quantize_stream, quantize_values
 from repro.core.netfilter import NetFilter
 from repro.kernels import ref
 
@@ -237,6 +237,10 @@ class _PlannedCall:
     #           query fields ride the GPV path like addTo streams do
     logs: np.ndarray | None = None              # resolved logical addrs
     vals: np.ndarray | None = None
+    device_plan: bool = False                   # device-resident GPV lane ok
+    fvals: np.ndarray | None = None             # unquantized fp32 stream
+    #         ^ set instead of ``vals`` when the update rides the device
+    #           lane: quantization happens inside the fused switch kernel
     spills: list = field(default_factory=list)  # collision host-path pairs
     counter_ops: list = field(default_factory=list)  # CntFwd (key, delta)
     forwarded: bool = True
@@ -260,15 +264,24 @@ class _MapOpBuffer:
 
     def __init__(self, server):
         self.server = server
-        self._logs: list[np.ndarray] = []
-        self._vals: list[np.ndarray] = []
+        # ordered stream of ("i", logs, int64 vals) and
+        # ("f", logs, fp32 vals, scale) chunks: fp32 chunks come from
+        # device-lane calls and flush through the fused quantize+addto
+        # kernel; submission order is preserved across both flavors
+        self._chunks: list[tuple] = []
         self._extra: list[tuple[int, int]] = []     # scalar (addr, delta)
         self._spills: list[tuple[int, int]] = []
 
     def addto(self, logs: np.ndarray, vals: np.ndarray) -> None:
         if len(logs):
-            self._logs.append(np.asarray(logs, np.uint32))
-            self._vals.append(np.asarray(vals, np.int64))
+            self._chunks.append(("i", np.asarray(logs, np.uint32),
+                                 np.asarray(vals, np.int64)))
+
+    def addto_f(self, logs: np.ndarray, fvals: np.ndarray, scale) -> None:
+        """Buffer an unquantized fp32 update stream (device lane)."""
+        if len(logs):
+            self._chunks.append(("f", np.asarray(logs, np.uint32),
+                                 np.asarray(fvals, np.float32), scale))
 
     def add_scalar(self, addr: int, delta: int) -> None:
         """Single-register update (CntFwd counters) without the per-call
@@ -287,15 +300,33 @@ class _MapOpBuffer:
         if self._extra:
             # counter addresses are disjoint from data keys, so appending
             # them after the data chunks preserves observable semantics
-            self._logs.append(np.array([a for a, _ in self._extra],
-                                       np.uint32))
-            self._vals.append(np.array([d for _, d in self._extra],
-                                       np.int64))
+            self._chunks.append(("i",
+                                 np.array([a for a, _ in self._extra],
+                                          np.uint32),
+                                 np.array([d for _, d in self._extra],
+                                          np.int64)))
             self._extra = []
-        if self._logs:
-            self.server.addto_batch(np.concatenate(self._logs),
-                                    np.concatenate(self._vals))
-            self._logs, self._vals = [], []
+        if not self._chunks:
+            return
+        chunks, self._chunks = self._chunks, []
+        kinds = {c[0] for c in chunks}
+        if kinds == {"f"} and len({c[3] for c in chunks}) == 1:
+            # pure device-lane flush at one precision: ONE fused
+            # quantize+addto batch, values never quantize on host
+            self.server.addto_batch_f32(
+                np.concatenate([c[1] for c in chunks]),
+                np.concatenate([c[2] for c in chunks]), chunks[0][3])
+            return
+        if "f" in kinds:
+            # mixed flush (or mixed precisions): demote fp32 chunks in
+            # submission order via the host quantizer — element-exact for
+            # fp32 streams (pinned by tests/test_wire_path.py), so the
+            # one concatenated int batch preserves ordering semantics
+            chunks = [("i", c[1],
+                       quantize_stream(c[2], c[3]).astype(np.int64))
+                      if c[0] == "f" else c for c in chunks]
+        self.server.addto_batch(np.concatenate([c[1] for c in chunks]),
+                                np.concatenate([c[2] for c in chunks]))
 
 
 # How long a pipeline pass may wait for a channel's plane lock before
@@ -413,6 +444,17 @@ def _run_pipeline_locked(channel: Channel, host_server: Server,
     for c in calls:
         if c.items:
             if isinstance(c.items, TensorSegment):
+                if (c.device_plan and c.items.qvals is None
+                        and c.items.data.dtype == np.float32):
+                    # device lane: the fp32 stream stays unquantized —
+                    # the fused switch kernel quantizes on device. Only
+                    # fp32 qualifies (the kernel computes in fp32, so a
+                    # float64 stream would drift vs the host oracle;
+                    # float64 and modify-processed streams host-quantize
+                    # below, keeping results element-exact either way).
+                    c.logs, c.fvals, c.spills = c.agent.resolve_dense_f32(
+                        len(c.items), c.items.data, 10 ** c.nf.precision)
+                    continue
                 c.items.quantize(10 ** c.nf.precision)
                 c.logs, c.vals, c.spills = c.agent.resolve_dense(
                     len(c.items), c.items.qvals)
@@ -459,7 +501,10 @@ def _run_pipeline_locked(channel: Channel, host_server: Server,
         for c in calls:
             if c.logs is not None:
                 buf.spill(c.spills)
-                buf.addto(c.logs, c.vals)
+                if c.fvals is not None:
+                    buf.addto_f(c.logs, c.fvals, 10 ** c.nf.precision)
+                else:
+                    buf.addto(c.logs, c.vals)
             for key, delta in c.counter_ops:
                 buf.add_scalar(key, delta)
 
@@ -478,7 +523,19 @@ def _run_pipeline_locked(channel: Channel, host_server: Server,
                 seg = (c.items if isinstance(c.items, TensorSegment) else
                        c.qitems if isinstance(c.qitems, TensorSegment)
                        else None)
-                if seg is not None:
+                use_dev = (seg is not None and c.array_reply
+                           and c.device_plan
+                           and getattr(server, "device", False))
+                if use_dev:
+                    # device GPV reply: one fused gather+dequantize kernel,
+                    # the reply is a device-resident fp32 jax array — the
+                    # int32 registers never materialize host-side (raw is
+                    # pulled back only when a clear must write them back)
+                    logs = c.agent.dense_addrs(len(seg))
+                    vals_dev, raw = server.read_batch_dev(
+                        logs, scale, need_raw=(c.nf.clear in POLICIES))
+                    c.reply[fname] = vals_dev.reshape(seg.shape)
+                elif seg is not None:
                     # GPV reply: one address-table slice, one gather, one
                     # vectorized dequantize — for the addTo stream's echo
                     # AND for pure-query (ReadMostly/Get) array requests.
@@ -562,6 +619,11 @@ class Stub:
         self.runtime = runtime            # owning NetRPC / IncRuntime
         self.agents = {m: ch.client() for m, ch in channels.items()}
         self.reply_arrays = False
+        # methods whose channel is device-resident (schema device=True):
+        # their fp32 GPV streams ride the fused quantize/addto device lane
+        # and their array replies come back as jax arrays. Set on bind by
+        # the schema layer, like reply_arrays.
+        self.device_methods: frozenset = frozenset()
         self._array_ok = {m: _array_get_field(md)
                           for m, md in service.methods.items()}
 
@@ -569,7 +631,8 @@ class Stub:
         return _PlannedCall(agent=self.agents[method],
                             md=self.service.methods[method], request=request,
                             array_reply=(self.reply_arrays
-                                         and self._array_ok[method]))
+                                         and self._array_ok[method]),
+                            device_plan=(method in self.device_methods))
 
     def call(self, method: str, request: dict) -> dict:
         return self.call_batch(method, [request])[0]
@@ -790,10 +853,19 @@ class NetRPC:
         channels = {}
         for mname, md in service.methods.items():
             app = md.netfilter.app_name
+            want_dev = bool(schema is not None and
+                            getattr(schema, "device_apps", {}).get(app))
             if app in self.controller.by_name:
                 ch = self.controller.lookup(app)
+                if want_dev and not getattr(ch.server, "device", False):
+                    raise ValueError(
+                        f"channel {app!r} was registered host-resident but "
+                        f"this schema declares device=True; register the "
+                        f"device schema first (a device channel can serve "
+                        f"host schemas, not the reverse)")
             else:
-                ch = self.controller.register(md.netfilter, n_slots)
+                ch = self.controller.register(md.netfilter, n_slots,
+                                              device=want_dev)
             channels[mname] = ch
         if schema is not None:
             for app, pol in schema.channel_policies.items():

@@ -138,10 +138,11 @@ class _FieldSpec:
     precision: int | None = None
     clear: str | None = None
     modify: tuple | None = None
+    device: bool | None = None
 
-    _OPTIONS = {"agg": ("precision", "clear", "modify"),
-                "read": ("precision", "clear"),
-                "get": ("precision", "clear")}
+    _OPTIONS = {"agg": ("precision", "clear", "modify", "device"),
+                "read": ("precision", "clear", "device"),
+                "get": ("precision", "clear", "device")}
     _NAMES = {"agg": "Agg", "read": "ReadMostly", "get": "Get"}
 
     def __call__(self, **kw) -> "_FieldSpec":
@@ -151,6 +152,14 @@ class _FieldSpec:
         if unknown:
             raise SchemaError(f"{ctx}: unknown option(s) {sorted(unknown)} "
                               f"(known: {', '.join(allowed)})")
+        if "device" in kw:
+            if kw["device"] is not None:
+                kw["device"] = bool(kw["device"])
+            if kw["device"] and self.iedt not in ("FPArray", "IntArray"):
+                raise SchemaError(
+                    f"{ctx}: device=True needs a dense array IEDT "
+                    f"(FPArray/IntArray) — map-typed fields have no "
+                    f"contiguous device-resident layout")
         if "precision" in kw:
             p = int(kw["precision"])
             if not (0 <= p <= 9):
@@ -284,6 +293,7 @@ class RpcSchema:
     reply: tuple[Field, ...]
     netfilter: NetFilter
     drain: Any = None
+    device: bool = False         # device-resident register partition
 
 
 @dataclass
@@ -294,6 +304,10 @@ class ServiceSchema:
     rpcs: dict[str, RpcSchema] = field(default_factory=dict)
     service: Service = None
     channel_policies: dict[str, Any] = field(default_factory=dict)
+    # apps whose register partition is device-resident (any RPC on the
+    # channel declared device=True): make_stub registers their channels
+    # with a DeviceSegment-backed ServerAgent
+    device_apps: dict[str, bool] = field(default_factory=dict)
 
     def bind(self, stub: Stub) -> "TypedStub":
         # typed surface opts into the GPV wire format: FPArray/IntArray
@@ -302,6 +316,10 @@ class ServiceSchema:
         # Stubs built from a legacy Service never set this, so the
         # string-keyed compat surface keeps its {index: value} dicts.
         stub.reply_arrays = True
+        # device=True RPCs additionally ride the fused device GPV lane
+        # (fp32 streams quantize on device; array replies are jax arrays)
+        stub.device_methods = frozenset(
+            m for m, rs in self.rpcs.items() if rs.device)
         return TypedStub(self, stub)
 
 
@@ -463,6 +481,10 @@ def _compile_rpc(cls_name: str, fname: str, fn, opts: _RpcOptions,
     clear = _merge_option(ctx, "clear", *[s.clear for s in specs]) or "nop"
     modify = _merge_option(ctx, "modify",
                            *[s.modify for s in specs]) or ("nop", 0)
+    # device residency is schema-level routing, NOT part of the NetFilter
+    # wire format (NetFilter.from_dict would reject it; goldens stay
+    # byte-identical) — it selects which backing store serves the channel
+    device = bool(_merge_option(ctx, "device", *[s.device for s in specs]))
     if clear != "nop" and agg is None and read is None and get is None:
         raise SchemaError(f"{ctx}: clear={clear!r} without an Agg/"
                           f"ReadMostly/Get field has nothing to clear")
@@ -488,7 +510,7 @@ def _compile_rpc(cls_name: str, fname: str, fn, opts: _RpcOptions,
         raise SchemaError(f"{ctx}: {e}") from None
     return RpcSchema(name=fname, app=app, request=tuple(req_fields),
                      reply=tuple(reply_fields), netfilter=nf,
-                     drain=opts.drain)
+                     drain=opts.drain, device=device)
 
 
 def compile_service(cls, *, default_app: str | None = None,
@@ -519,6 +541,11 @@ def compile_service(cls, *, default_app: str | None = None,
                     f"({prev} vs {pol}); a channel has one scheduler "
                     f"policy")
             schema.channel_policies[rs.app] = pol
+        if rs.device:
+            # one device RPC makes the whole channel device-resident (the
+            # backing store is per-partition, not per-RPC); host RPCs on
+            # the same channel keep working — the int paths serve both
+            schema.device_apps[rs.app] = True
     if not schema.rpcs:
         raise SchemaError(f"{cls.__name__}: no @inc.rpc methods — a "
                           f"service schema needs at least one RPC")

@@ -1,0 +1,55 @@
+"""Pallas execution-mode selection: interpret vs compiled, per backend.
+
+The raw kernels (sparse_addto / inc_agg / quantize / dequantize / the fused
+GPV pair) take ``interpret=None`` and resolve it here:
+
+  1. an explicit ``interpret=`` parameter wins;
+  2. else the ``REPRO_PALLAS_INTERPRET`` env var forces a mode process-wide
+     ("1" -> interpret everywhere, "0" -> compiled everywhere — the CI knob
+     that lets an accelerator container exercise the interpret oracle and a
+     CPU container assert the compiled lane raises);
+  3. else the jax backend decides: TPU/GPU compile, CPU interprets.
+
+Historically the kernels hard-coded ``interpret=True``, so a TPU run of the
+raw kernel entry points silently interpreted — the device data plane never
+actually compiled. Tests assert the mode they exercised via
+:func:`pallas_mode` instead of assuming it.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_ENV = "REPRO_PALLAS_INTERPRET"
+_COMPILED_BACKENDS = ("tpu", "gpu")
+
+
+def accelerator_present() -> bool:
+    """True when the default jax backend is an accelerator (TPU/GPU) —
+    the gate for the compiled-kernel lane and the device-path perf rows."""
+    return jax.default_backend() in _COMPILED_BACKENDS
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """The Pallas ``interpret=`` flag a kernel launch should use.
+
+    Explicit parameter > env override (``REPRO_PALLAS_INTERPRET=1`` forces
+    interpret, ``=0`` forces compiled) > backend default (CPU interprets,
+    TPU/GPU compile).
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get(_ENV)
+    if env == "1":
+        return True
+    if env == "0":
+        return False
+    return not accelerator_present()
+
+
+def pallas_mode(interpret: bool | None = None) -> str:
+    """``"interpret"`` or ``"compiled"`` — the mode a default-argument
+    kernel call runs in right now. Kernel tests record/assert this so a
+    green run names the lane it actually exercised."""
+    return "interpret" if resolve_interpret(interpret) else "compiled"

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.constants import (DEFAULT_BLOCK_ROWS, INT32_MAX, INT32_MIN,
                                      LANES)
 
@@ -28,8 +29,11 @@ def _dequantize_kernel(inv_scale_ref, q_ref, x_ref, m_ref):
 
 def dequantize_pallas(q: jax.Array, scale: jax.Array, *,
                       block_rows: int = DEFAULT_BLOCK_ROWS,
-                      interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """q: int32 (rows, LANES) -> (fp32 values, bool overflow mask)."""
+                      interpret: bool | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """q: int32 (rows, LANES) -> (fp32 values, bool overflow mask).
+    ``interpret=None`` resolves per backend (kernels/backend.py)."""
+    interpret = resolve_interpret(interpret)
     rows, lanes = q.shape
     assert lanes == LANES, f"minor dim must be {LANES}, got {lanes}"
     assert rows % block_rows == 0, (rows, block_rows)

@@ -1,0 +1,167 @@
+"""Pallas TPU kernels: the fused device-resident GPV data plane.
+
+The device-backed switch memory (core/inc_map.py:DeviceSegment) keeps a
+register segment as an int32 jax array and lowers the two data-plane
+verbs through ONE kernel launch each:
+
+  - ``fused_addto_pallas``: transmit side — quantize (scale, round,
+    saturate to the overflow sentinels) a float32 update stream and
+    saturating-add it into a contiguous slot range of the segment, fused.
+    Previously this was three dispatches (quantize kernel, gather,
+    sat_add) with an HBM round trip between each.
+  - ``fused_scatter_pallas``: the same fuse for a sparse / duplicate-keyed
+    stream — quantize the whole block vectorized, then apply the updates
+    serially in stream order (the switch's one-access-per-stage semantics;
+    saturation order matches the sequential oracle exactly, including
+    duplicate physical addresses within one batch).
+  - ``fused_read_pallas``: receive side — gather a contiguous slot range
+    and dequantize (reciprocal multiply) plus the overflow-sentinel mask,
+    fused; the reply value block never exists as int32 in host memory.
+
+Quantization matches the host oracle element-exactly for float32 streams
+whose scaled values fit int32: both compute round-half-to-even on the same
+float32 product (np.rint / jnp.round). Values outside the range saturate
+to the INT32_MAX/INT32_MIN sentinels here (the switch's overflow
+convention) where the host int64 path keeps the exact product — the
+device lane therefore only carries streams inside the fixed-point range
+(core/inc_map.py routes the rest to the host path).
+
+Layout: like kernels/sparse_addto.py, the whole segment is a single VMEM
+block (40K x 4 B = 160 KiB by default) and the update/read stream rides a
+second block; ``pl.ds`` addresses the partition's slot range dynamically
+so one compiled kernel serves every (segment shape, stream shape) pair.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.constants import INT32_MAX, INT32_MIN, SAT_MAX, SAT_MIN
+from repro.kernels.inc_agg import _sat_add_block
+
+
+def _quantize_block(x, scale):
+    """Fixed-point quantize with sentinel saturation (the kernel-side
+    mirror of kernels/quantize.py:_quantize_kernel)."""
+    y = jnp.round(x * scale)
+    q = jnp.clip(y, float(SAT_MIN), float(SAT_MAX)).astype(jnp.int32)
+    q = jnp.where(y > float(SAT_MAX), jnp.int32(INT32_MAX), q)
+    q = jnp.where(y < float(SAT_MIN), jnp.int32(INT32_MIN), q)
+    return q
+
+
+def _fused_addto_kernel(start_ref, scale_ref, val_ref, regs_ref, out_ref):
+    out_ref[...] = regs_ref[...]
+    n = val_ref.shape[0]
+    start = start_ref[0]
+    q = _quantize_block(val_ref[...], scale_ref[0])
+    cur = out_ref[pl.ds(start, n)]
+    out_ref[pl.ds(start, n)] = _sat_add_block(cur, q)
+
+
+def fused_addto_pallas(regs: jax.Array, start: jax.Array, fvals: jax.Array,
+                       scale: jax.Array, *,
+                       interpret: bool | None = None) -> jax.Array:
+    """regs: int32 (n_slots,); fvals: fp32 (n,) -> updated regs with
+    ``quantize(fvals)`` saturating-added over slots [start, start+n).
+
+    The dense GPV fast path: a tensor's flat indices map to a contiguous
+    slot range (identity grant order), so the scatter is a slice and the
+    whole transmit side is one fused elementwise pass. ``interpret=None``
+    resolves per backend (kernels/backend.py).
+    """
+    n_slots = regs.shape[0]
+    n = fvals.shape[0]
+    return pl.pallas_call(
+        _fused_addto_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_slots,), jnp.int32),
+        in_specs=[
+            pl.BlockSpec((1,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n_slots,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_slots,), lambda: (0,)),
+        interpret=resolve_interpret(interpret),
+    )(jnp.asarray(start, jnp.int32).reshape(1),
+      jnp.asarray(scale, jnp.float32).reshape(1),
+      fvals.astype(jnp.float32), regs.astype(jnp.int32))
+
+
+def _fused_scatter_kernel(scale_ref, idx_ref, val_ref, regs_ref, out_ref):
+    out_ref[...] = regs_ref[...]
+    q = _quantize_block(val_ref[...], scale_ref[0])
+    k = idx_ref.shape[0]
+
+    def body(i, _):
+        j = idx_ref[i]
+        out_ref[j] = _sat_add_block(out_ref[j], q[i])
+        return 0
+
+    jax.lax.fori_loop(0, k, body, 0)
+
+
+def fused_scatter_pallas(regs: jax.Array, idx: jax.Array, fvals: jax.Array,
+                         scale: jax.Array, *,
+                         interpret: bool | None = None) -> jax.Array:
+    """regs: int32 (n_slots,); idx: int32 (k,); fvals: fp32 (k,) ->
+    updated regs. Quantize is vectorized over the block; the saturating
+    scatter-add applies serially in stream order, so duplicate addresses
+    accumulate exactly like the sequential oracle (sticky sentinels and
+    all). Padding with (idx=0, fval=0.0) is a no-op update."""
+    n_slots = regs.shape[0]
+    k = idx.shape[0]
+    return pl.pallas_call(
+        _fused_scatter_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_slots,), jnp.int32),
+        in_specs=[
+            pl.BlockSpec((1,), lambda: (0,)),
+            pl.BlockSpec((k,), lambda: (0,)),
+            pl.BlockSpec((k,), lambda: (0,)),
+            pl.BlockSpec((n_slots,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_slots,), lambda: (0,)),
+        interpret=resolve_interpret(interpret),
+    )(jnp.asarray(scale, jnp.float32).reshape(1), idx.astype(jnp.int32),
+      fvals.astype(jnp.float32), regs.astype(jnp.int32))
+
+
+def _fused_read_kernel(start_ref, inv_ref, regs_ref, val_ref, mask_ref):
+    n = val_ref.shape[0]
+    q = regs_ref[pl.ds(start_ref[0], n)]
+    val_ref[...] = q.astype(jnp.float32) * inv_ref[0]
+    mask_ref[...] = (q == INT32_MAX) | (q == INT32_MIN)
+
+
+def fused_read_pallas(regs: jax.Array, start: jax.Array, n: int,
+                      scale: jax.Array, *,
+                      interpret: bool | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """regs: int32 (n_slots,) -> (fp32 values (n,), bool overflow mask
+    (n,)) for slots [start, start+n): the Map.get gather and the
+    dequantize fused into one kernel, so a device-backed Get reply never
+    materializes int32 registers host-side. The reciprocal is computed
+    like kernels/dequantize.py (1 / float32(scale)), keeping device and
+    host-fallback replies bit-identical."""
+    n_slots = regs.shape[0]
+    inv = jnp.float32(1.0) / jnp.asarray(scale, jnp.float32)
+    return pl.pallas_call(
+        _fused_read_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.bool_),
+        ),
+        in_specs=[
+            pl.BlockSpec((1,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+            pl.BlockSpec((n_slots,), lambda: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+        ),
+        interpret=resolve_interpret(interpret),
+    )(jnp.asarray(start, jnp.int32).reshape(1), inv.reshape(1),
+      regs.astype(jnp.int32))

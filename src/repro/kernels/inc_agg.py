@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.constants import (DEFAULT_BLOCK_ROWS, INT32_MAX, INT32_MIN,
                                      LANES, SAT_MAX, SAT_MIN)
 
@@ -43,8 +44,12 @@ def _sat_add_kernel(a_ref, b_ref, o_ref):
 
 def sat_add_pallas(a: jax.Array, b: jax.Array, *,
                    block_rows: int = DEFAULT_BLOCK_ROWS,
-                   interpret: bool = True) -> jax.Array:
-    """a, b: int32 (rows, LANES) -> saturating elementwise sum."""
+                   interpret: bool | None = None) -> jax.Array:
+    """a, b: int32 (rows, LANES) -> saturating elementwise sum.
+
+    ``interpret=None`` resolves per backend (kernels/backend.py): CPU
+    interprets, TPU/GPU compile."""
+    interpret = resolve_interpret(interpret)
     rows, lanes = a.shape
     assert a.shape == b.shape
     assert lanes == LANES, f"minor dim must be {LANES}, got {lanes}"

@@ -18,11 +18,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.constants import (DEFAULT_BLOCK_ROWS, INT32_MAX,
                                      INT32_MIN, LANES, SAT_MAX, SAT_MIN)
 from repro.kernels.dequantize import dequantize_pallas
 from repro.kernels.flash_attn import (flash_attention_chunked_ref,
                                       flash_attention_pallas)
+from repro.kernels.fused_gpv import (fused_addto_pallas, fused_read_pallas,
+                                     fused_scatter_pallas)
 from repro.kernels.inc_agg import sat_add_pallas
 from repro.kernels.pack_int8 import pack_int8_pallas, unpack_int8_pallas
 from repro.kernels.quantize import quantize_pallas
@@ -36,7 +39,7 @@ def use_pallas() -> bool:
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return resolve_interpret(None)
 
 
 def _to_tiles(x: jax.Array, block_rows: int) -> tuple[jax.Array, int]:
@@ -265,10 +268,11 @@ def _sparse_addto_dev(regs: jax.Array, idx: jax.Array,
     return sparse_addto_pallas(regs, idx, val, interpret=_interpret())
 
 
-def zeros_regs(n_slots: int):
-    """A fresh register segment: device array on TPU, numpy on the host
-    path (so host flushes never round-trip through the device)."""
-    if use_pallas():
+def zeros_regs(n_slots: int, device: bool = False):
+    """A fresh register segment: device array on TPU or when the segment
+    is declared device-resident, numpy on the host path (so host flushes
+    never round-trip through the device)."""
+    if device or use_pallas():
         return jnp.zeros(n_slots, jnp.int32)
     return np.zeros(n_slots, np.int32)
 
@@ -305,6 +309,96 @@ def sparse_addto_bucketed(regs, idx, val):
         idx = jnp.pad(jnp.asarray(idx, jnp.int32), (0, bucket - k))
         val = jnp.pad(jnp.asarray(val, jnp.int32), (0, bucket - k))
     return sparse_addto(regs, idx, val)
+
+
+# -- device-resident GPV lane (fused quantize/dequantize kernels) ------------
+#
+# These wrappers always run the Pallas path on jnp register files,
+# regardless of backend (interpret resolves per kernels/backend.py).
+# They serve core/inc_map.py:DeviceSegment; the host path never calls them.
+
+@jax.jit
+def _fused_addto_jit(regs, start, fvals, scale):
+    return fused_addto_pallas(regs, start, fvals, scale)
+
+
+@jax.jit
+def _fused_scatter_jit(regs, idx, fvals, scale):
+    return fused_scatter_pallas(regs, idx, fvals, scale)
+
+
+@jax.jit
+def _device_scatter_int_jit(regs, idx, vals):
+    return sparse_addto_pallas(regs, idx, vals)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _fused_read_jit(regs, start, n, scale):
+    return fused_read_pallas(regs, start, n, scale)
+
+
+def device_addto_dense(regs, start: int, fvals, scale) -> jax.Array:
+    """Fused quantize + saturating add of an fp32 stream over the
+    contiguous slot range [start, start+len). The stream is padded to a
+    power-of-two bucket (quantize(0.0) == 0 is a sat-add no-op) to bound
+    the jit cache; when the bucket would run past the segment end, the
+    stream runs at exact length instead (one extra jit entry — never the
+    serial scatter, whose per-element loop is pathological in interpret
+    mode for a full-segment slice)."""
+    n = int(fvals.shape[0])
+    if n == 0:
+        return regs
+    bucket = 1 << (n - 1).bit_length()
+    if start + bucket > int(regs.shape[0]):
+        bucket = n
+    if bucket != n:
+        fvals = jnp.pad(jnp.asarray(fvals, jnp.float32), (0, bucket - n))
+    return _fused_addto_jit(regs, start, fvals, scale)
+
+
+def device_addto_scatter(regs, idx, fvals, scale) -> jax.Array:
+    """Fused quantize + serial saturating scatter-add of an fp32 stream;
+    duplicate addresses accumulate in stream order, exactly like the host
+    sequential oracle. Power-of-two padded with (idx=0, fval=0.0) no-ops."""
+    k = int(idx.shape[0])
+    if k == 0:
+        return regs
+    bucket = 1 << (k - 1).bit_length()
+    if bucket != k:
+        idx = jnp.pad(jnp.asarray(idx, jnp.int32), (0, bucket - k))
+        fvals = jnp.pad(jnp.asarray(fvals, jnp.float32), (0, bucket - k))
+    return _fused_scatter_jit(regs, idx, fvals, scale)
+
+
+def device_addto_int(regs, idx, vals) -> jax.Array:
+    """Saturating scatter-add of an already-quantized int32 stream into a
+    device register file — the int lane of a DeviceSegment (spill
+    restores, clear write-backs, host-quantized fallbacks). Runs the
+    Pallas kernel even on CPU backends so the segment stays a jnp array."""
+    k = int(idx.shape[0])
+    if k == 0:
+        return regs
+    bucket = 1 << (k - 1).bit_length()
+    if bucket != k:
+        idx = jnp.pad(jnp.asarray(idx, jnp.int32), (0, bucket - k))
+        vals = jnp.pad(jnp.asarray(vals, jnp.int32), (0, bucket - k))
+    return _device_scatter_int_jit(regs, jnp.asarray(idx, jnp.int32),
+                                   jnp.asarray(vals, jnp.int32))
+
+
+def device_read_dense(regs, start: int, n: int, scale
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Fused gather + dequantize of slots [start, start+n) -> (fp32
+    values, bool overflow-sentinel mask), both jnp. Reads are bucketed to
+    a power-of-two length and sliced back; a bucket that would run past
+    the segment end reads at exact length (one extra jit entry)."""
+    if n == 0:
+        return (jnp.zeros(0, jnp.float32), jnp.zeros(0, jnp.bool_))
+    bucket = 1 << (n - 1).bit_length()
+    if start + bucket > int(regs.shape[0]):
+        bucket = n
+    vals, mask = _fused_read_jit(regs, start, bucket, scale)
+    return vals[:n], mask[:n]
 
 
 @partial(jax.jit, static_argnames=("block_rows",))

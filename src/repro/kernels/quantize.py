@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.constants import (DEFAULT_BLOCK_ROWS, INT32_MAX, INT32_MIN,
                                      LANES, SAT_MAX, SAT_MIN)
 
@@ -32,8 +33,10 @@ def _quantize_kernel(scale_ref, x_ref, o_ref):
 
 def quantize_pallas(x: jax.Array, scale: jax.Array, *,
                     block_rows: int = DEFAULT_BLOCK_ROWS,
-                    interpret: bool = True) -> jax.Array:
-    """x: fp32 (rows, LANES); scale: fp32 scalar -> int32 (rows, LANES)."""
+                    interpret: bool | None = None) -> jax.Array:
+    """x: fp32 (rows, LANES); scale: fp32 scalar -> int32 (rows, LANES).
+    ``interpret=None`` resolves per backend (kernels/backend.py)."""
+    interpret = resolve_interpret(interpret)
     rows, lanes = x.shape
     assert lanes == LANES, f"minor dim must be {LANES}, got {lanes}"
     assert rows % block_rows == 0, (rows, block_rows)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.inc_agg import _sat_add_block
 
 
@@ -35,12 +36,17 @@ def _sparse_addto_kernel(idx_ref, val_ref, regs_ref, out_ref):
 
 
 def sparse_addto_pallas(regs: jax.Array, idx: jax.Array, val: jax.Array, *,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool | None = None) -> jax.Array:
     """regs: int32 (n_slots,), idx: int32 (k,), val: int32 (k,) -> updated regs.
 
     Single-block kernel: the whole register segment is VMEM resident and the
     update stream is applied in order (saturation order = oracle order).
+
+    ``interpret=None`` resolves per backend (kernels/backend.py): CPU
+    interprets, TPU/GPU compile — the kernel no longer pins itself to
+    interpret mode on an accelerator.
     """
+    interpret = resolve_interpret(interpret)
     n = regs.shape[0]
     k = idx.shape[0]
     return pl.pallas_call(

@@ -71,6 +71,30 @@ def telemetry_service(app: str):
     return Telemetry
 
 
+# fixed-point digits for gradient elements on the device-resident grad
+# channel: micro precision keeps the quantization error below bf16 ULP for
+# O(1) gradients while a full dp-group's summed elements stay well under
+# the int32 saturation sentinels (n_dp * 1e6 * |g| << 2**31)
+GRAD_PRECISION = 6
+
+
+def gradient_service(app: str):
+    """Cross-loop gradient aggregation as a device-resident SyncAgtr app:
+    flat fp32 gradient blocks ride Map.addTo (summed in-network through
+    the fused quantize+saturating-add Pallas kernel on the DeviceSegment
+    register file), and every push's Get reply is the running sum as a
+    device-resident fp32 jax array (fused gather+dequantize) — gradients
+    flow back into the train step without a host round trip. clear="copy"
+    makes each aggregation round independent (the reply is the backup)."""
+    @inc.service(app=app, name="GradAggregate")
+    class GradAggregate:
+        @inc.rpc(request_msg="GradPush")
+        def PushGrads(self, grads: inc.Agg[inc.FPArray](
+                precision=GRAD_PRECISION, clear="copy", device=True)
+                ) -> {"grads": inc.Get[inc.FPArray]}: ...
+    return GradAggregate
+
+
 def agreement_service(threshold: int, app: str):
     """Step-commit quorum as an Agreement app: the threshold-th worker vote
     for a step key forwards exactly one commit notification (CntFwd)."""
@@ -96,7 +120,7 @@ class TrainTelemetry:
 
     def __init__(self, runtime: IncRuntime | None = None, *,
                  n_workers: int = 1, quorum: float = 1.0,
-                 app_prefix: str = "train"):
+                 app_prefix: str = "train", grad_slots: int = 0):
         # telemetry is latency-insensitive: a generous time trigger lets
         # many steps' pushes coalesce into each drained batch (reads still
         # see everything — the inline ReadMetrics call flushes first)
@@ -109,6 +133,12 @@ class TrainTelemetry:
             telemetry_service(f"{app_prefix}-metrics"))
         self.agree = self.rt.make_stub(
             agreement_service(self.threshold, f"{app_prefix}-agree"))
+        # device-resident gradient channel (opt-in by capacity): pushes
+        # quantize/aggregate on device, replies are fp32 jax arrays
+        self.grads = None
+        if grad_slots:
+            self.grads = self.rt.make_stub(
+                gradient_service(f"{app_prefix}-grads"), n_slots=grad_slots)
         self._names: set[str] = set()
         # O(1) vote accounting: CntFwd invokes the CommitStep handler
         # exactly once per quorum, inside the (plane-serialized) pipeline
@@ -135,6 +165,34 @@ class TrainTelemetry:
         f = self.agree.CommitStep(kvs={f"step-{step}": 1})
         self._last_vote = f
         return f
+
+    def push_grads(self, flat_grad) -> IncFuture:
+        """Accumulate one flat fp32 gradient block in-network (device
+        lane); the reply's ``grads`` is the aggregated block as a
+        device-resident fp32 jax array, cleared for the next round."""
+        if self.grads is None:
+            raise RuntimeError("TrainTelemetry built without grad_slots; "
+                               "pass grad_slots=<flat gradient length>")
+        return self.grads.PushGrads(grads=flat_grad)
+
+    def aggregate_gradients(self, grads):
+        """Aggregate a gradient pytree through the device channel: leaves
+        flatten into one fp32 block, one PushGrads round-trips it through
+        the fused quantize -> Map.addTo -> dequantize path, and the reply
+        splits back into the tree — every array stays a jax array, so the
+        result feeds a train step's optimizer without leaving the device.
+        Quantization is GRAD_PRECISION fixed-point (the SyncAgtr wire
+        format), so values round to 1e-6 like the in-network ring would."""
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        flat = jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32) for l in leaves])
+        out = self.push_grads(flat).result()["grads"]
+        parts, pos = [], 0
+        for l in leaves:
+            n = int(l.size)
+            parts.append(out[pos:pos + n].reshape(l.shape))
+            pos += n
+        return jax.tree_util.tree_unflatten(treedef, parts)
 
     def read(self, names=None) -> dict[str, float]:
         """Read accumulated metrics (queued pushes execute first: the

@@ -1,0 +1,338 @@
+"""Device-resident GPV data plane (ISSUE 6): differential device-vs-host.
+
+The contract under test: ``device=True`` on an Agg/Get annotation changes
+WHERE the registers live and HOW the quantize/addto/read verbs execute
+(fused Pallas kernels over a jax int32 segment vs numpy over a host
+segment) but never WHAT they compute. Every test here runs the same
+stream down both lanes and asserts element-exact agreement:
+
+  registers      identical int32 contents after any addto/clear sequence,
+                 including misses, spills, and duplicate addresses;
+  replies        the device Get reply is a float32 jax array equal to
+                 ``raw.astype(f32) * (1 / float32(scale))`` — the shared
+                 reciprocal-dequant formula of kernels/fused_gpv.py and
+                 the host fallback in inc_map.read_batch_dev;
+  stats          hits/misses/inc_bytes/host_bytes/spill parity, so the
+                 device lane cannot silently re-route traffic;
+  scheduling     a sharded runtime (``IncRuntime(workers=4)``) over a
+                 device channel equals the ``workers=1`` sequential run.
+
+The compiled-kernel lane is xfail-not-skip on CPU: the test body is the
+same differential check, it just needs a TPU/GPU backend to lower — on an
+accelerator container it activates (and must pass) without edits.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.api as inc
+from repro.core import rpc as rpc_mod
+from repro.core.inc_map import ServerAgent, SwitchMemory, quantize_stream
+from repro.core.rpc import NetRPC
+from repro.core.runtime import DrainPolicy, IncRuntime
+from repro.kernels.backend import (accelerator_present, pallas_mode,
+                                   resolve_interpret)
+from repro.kernels.fused_gpv import (fused_addto_pallas, fused_read_pallas,
+                                     fused_scatter_pallas)
+
+
+def _grad_pair(app, *, precision=6, clear="nop", n_slots=64):
+    """(host stub, device stub) over identical schemas modulo device=."""
+    stubs = []
+    for device in (False, True):
+        @inc.service(app=f"{app}-{'dev' if device else 'host'}")
+        class Svc:
+            @inc.rpc(request_msg="NewGrad", reply_msg="AgtrGrad")
+            def Update(self, tensor: inc.Agg[inc.FPArray](
+                    precision=precision, clear=clear, device=device)
+                    ) -> {"tensor": inc.Get[inc.FPArray]}: ...
+        stubs.append(NetRPC().make_stub(Svc, n_slots=n_slots))
+    return stubs[0], stubs[1]
+
+
+def _raw_state(stub, n):
+    srv = stub.agents["Update"].server
+    return srv.read_batch(np.arange(n, dtype=np.uint32)).tolist()
+
+
+def _stats(stub):
+    srv = stub.agents["Update"].server
+    return {"hits": srv.hits, "misses": srv.misses,
+            "inc_bytes": srv.inc_bytes, "host_bytes": srv.host_bytes,
+            "spill": dict(srv.spill)}
+
+
+# ---- end-to-end: device lane == host lane ------------------------------------
+
+@pytest.mark.parametrize("clear", ["nop", "copy"])
+@pytest.mark.parametrize("precision", [0, 4, 6])
+def test_device_registers_and_replies_match_host(precision, clear):
+    host, dev = _grad_pair(f"DP-eq-{precision}-{clear}",
+                           precision=precision, clear=clear, n_slots=48)
+    rng = np.random.RandomState(11)
+    inv = np.float32(1.0) / np.float32(10.0 ** precision)
+    for _ in range(3):
+        g = (rng.randn(48) * 5).astype(np.float32)
+        r_host = host.Update(tensor=g).result()["tensor"]
+        r_dev = dev.Update(tensor=g).result()["tensor"]
+        # the device reply is a float32 jax array...
+        assert isinstance(r_dev, jnp.ndarray) and r_dev.dtype == jnp.float32
+        assert r_dev.shape == g.shape
+        # ... whose values are the reciprocal dequantize of the exact
+        # host-lane registers (raw/scale in f64, exactly invertible)
+        raw = np.rint(np.asarray(r_host) * 10.0 ** precision).astype(
+            np.int64)
+        np.testing.assert_array_equal(np.asarray(r_dev),
+                                      raw.astype(np.float32) * inv)
+    assert _raw_state(host, 48) == _raw_state(dev, 48)
+    assert _stats(host) == _stats(dev)
+
+
+def test_float64_stream_routes_to_host_quantize_and_still_matches():
+    """float64 payloads must NOT ride the f32 device kernels (the fused
+    quantize computes in f32, which is lossy for f64): the phase-2 router
+    host-quantizes them, and the device registers stay element-exact vs
+    the host lane anyway."""
+    host, dev = _grad_pair("DP-f64", precision=6, clear="copy", n_slots=32)
+    g = np.linspace(-3.0, 3.0, 32, dtype=np.float64) + 1e-9
+    for stub in (host, dev):
+        stub.Update(tensor=g).result()
+    assert _raw_state(host, 32) == _raw_state(dev, 32)
+    assert _stats(host) == _stats(dev)
+    # the reply still comes back device-resident under the same contract
+    out = dev.Update(tensor=np.zeros(32)).result()["tensor"]
+    assert isinstance(out, jnp.ndarray) and out.dtype == jnp.float32
+
+
+def test_gpv_off_dict_path_equals_device_lane():
+    """With GPV marshalling forced off, a device channel's updates travel
+    as per-element dicts and land through the int addto lane — the final
+    registers must equal the array-native device path."""
+    host, dev = _grad_pair("DP-dict", precision=4, n_slots=16)
+    g = np.array([1.25, -2.5, 0.0, 3.75] * 4, np.float32)
+    dev.Update(tensor=g).result()
+    prev = rpc_mod.set_gpv(False)
+    try:
+        host.Update(tensor=g).result()
+    finally:
+        rpc_mod.set_gpv(prev)
+    assert _raw_state(host, 16) == _raw_state(dev, 16)
+
+
+def test_empty_batch_both_lanes():
+    host, dev = _grad_pair("DP-empty", precision=2, n_slots=8)
+    for stub in (host, dev):
+        out = stub.Update(tensor=np.zeros(0, np.float32)).result()["tensor"]
+        assert len(np.ravel(np.asarray(out))) == 0
+    assert _stats(host) == _stats(dev)
+
+
+# ---- agent-level parity: misses, spill, duplicate addresses ------------------
+
+def _agent(device, n_slots=8):
+    return ServerAgent(SwitchMemory(2, 64), gaid=1, n_slots=n_slots,
+                       device=device)
+
+
+def test_addto_f32_miss_and_spill_stats_parity():
+    """A duplicate-heavy stream over more keys than the partition holds:
+    the device lane's hit/miss routing, spill contents, and byte counters
+    must match the host lane exactly — misses host-quantize into the same
+    spill dict either way."""
+    rng = np.random.RandomState(5)
+    logs = (rng.zipf(1.4, 300) % 24).astype(np.uint32)
+    fvals = (rng.randn(300) * 10).astype(np.float32)
+    agents = {d: _agent(d) for d in (False, True)}
+    for i in range(0, 300, 50):
+        for a in agents.values():
+            a.addto_batch_f32(logs[i:i + 50], fvals[i:i + 50], 10 ** 4)
+    host, dev = agents[False], agents[True]
+    assert (host.hits, host.misses) == (dev.hits, dev.misses)
+    assert host.inc_bytes == dev.inc_bytes
+    assert host.host_bytes == dev.host_bytes
+    assert dict(host.spill) == dict(dev.spill)
+    probe = np.unique(logs)
+    np.testing.assert_array_equal(host.read_batch(probe),
+                                  dev.read_batch(probe))
+
+
+def test_read_batch_dev_fallback_equals_fast_path():
+    """read_batch_dev's single-segment contiguous fast path and its
+    general fallback (spill present / partial hits) obey the same
+    reciprocal-dequant contract."""
+    dev = _agent(True, n_slots=16)
+    fv = np.arange(16, dtype=np.float32) / 3
+    dev.addto_batch_f32(np.arange(16, dtype=np.uint32), fv, 10 ** 4)
+    logs = np.arange(16, dtype=np.uint32)
+    vals, raw = dev.read_batch_dev(logs, 10 ** 4, need_raw=True)
+    assert isinstance(vals, jnp.ndarray) and raw is not None
+    want_raw = dev.read_batch(logs)
+    np.testing.assert_array_equal(raw, want_raw)
+    inv = np.float32(1.0) / np.float32(10.0 ** 4)
+    np.testing.assert_array_equal(np.asarray(vals),
+                                  want_raw.astype(np.float32) * inv)
+    # force the fallback: a spilled key makes the probe non-contiguous
+    dev.spill_host([(999, 7)])
+    vals2, _ = dev.read_batch_dev(np.array([999, 3], np.uint32), 10 ** 4)
+    np.testing.assert_array_equal(
+        np.asarray(vals2),
+        dev.read_batch(np.array([999, 3], np.uint32)).astype(np.float32)
+        * inv)
+
+
+def test_device_kernel_duplicate_addresses_match_host():
+    """Duplicate physical addresses inside ONE fused-scatter batch apply
+    serially in stream order — exactly the host fast path's semantics
+    (the satellite-2 sweep found zero divergence; this pins it)."""
+    regs0 = np.zeros(8, np.int32)
+    idx = np.array([3, 3, 5, 3, 5], np.int32)
+    fv = np.array([1.5, -0.25, 2.0, 1.0, -2.0], np.float32)
+    got = np.asarray(fused_scatter_pallas(
+        jnp.asarray(regs0), jnp.asarray(idx), jnp.asarray(fv), 100,
+        interpret=True))
+    want = regs0.copy().astype(np.int64)
+    q = quantize_stream(fv, 100)
+    for j, v in zip(idx, q):
+        want[j] += v
+    np.testing.assert_array_equal(got, want.astype(np.int32))
+
+
+# ---- sharded runtime: device channel under concurrent drains -----------------
+
+def _run_sharded(workers, n=32, rounds=10):
+    @inc.service(app=f"DP-shard-{workers}")
+    class Svc:
+        @inc.rpc(request_msg="NewGrad", reply_msg="AgtrGrad")
+        def Update(self, tensor: inc.Agg[inc.FPArray](
+                precision=6, clear="copy", device=True)
+                ) -> {"tensor": inc.Get[inc.FPArray]}: ...
+
+    rt = IncRuntime(policy=DrainPolicy(max_batch=3, max_delay=30.0,
+                                       eager_window=False), workers=workers)
+    try:
+        stub = rt.make_stub(Svc, n_slots=n)
+        rng = np.random.RandomState(17)
+        futs = [stub.Update(tensor=(rng.randn(n) * 2).astype(np.float32))
+                for _ in range(rounds)]
+        outs = [np.asarray(f.result(timeout=30)["tensor"]).tolist()
+                for f in futs]
+        state = _raw_state(stub, n)
+        rt.scheduling_report()          # per-channel stats audit
+        return outs, state
+    finally:
+        rt.close()
+
+
+def test_sharded_device_channel_equals_sequential():
+    want = _run_sharded(1)
+    got = _run_sharded(4)
+    assert got == want
+
+
+# ---- mode selection (satellite 1) --------------------------------------------
+
+def test_mode_resolution_param_env_backend(monkeypatch):
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # backend default: CPU interprets, TPU/GPU compile
+    assert resolve_interpret(None) is (not accelerator_present())
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert pallas_mode() == "interpret"
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert pallas_mode() == "compiled"
+    # an explicit parameter beats the env override
+    assert pallas_mode(True) == "interpret"
+
+
+def test_fused_kernels_honor_env_override(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=1 must reach the fused kernels' default
+    lane — the process-wide CI knob that forces the interpret oracle."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    regs = jnp.zeros(8, jnp.int32)
+    out = fused_addto_pallas(regs, 2, jnp.asarray([1.5, -2.0], jnp.float32),
+                             10)
+    assert np.asarray(out).tolist() == [0, 0, 15, -20, 0, 0, 0, 0]
+
+
+# ---- compiled lane: activates on an accelerator, xfail (not skip) on CPU -----
+
+@pytest.mark.xfail(not accelerator_present(), strict=False,
+                   reason="compiled Pallas lowering needs a TPU/GPU "
+                          "backend; xfail-not-skip so this lane runs and "
+                          "gates green on an accelerator container")
+def test_compiled_fused_kernels_match_interpret_oracle():
+    rng = np.random.RandomState(23)
+    regs = jnp.asarray(rng.randint(-1000, 1000, 256).astype(np.int32))
+    fv = jnp.asarray((rng.randn(64) * 7).astype(np.float32))
+    a_int = fused_addto_pallas(regs, 32, fv, 10 ** 4, interpret=True)
+    a_cmp = fused_addto_pallas(regs, 32, fv, 10 ** 4, interpret=False)
+    np.testing.assert_array_equal(np.asarray(a_cmp), np.asarray(a_int))
+    v_int, m_int = fused_read_pallas(a_int, 32, 64, 10 ** 4, interpret=True)
+    v_cmp, m_cmp = fused_read_pallas(a_cmp, 32, 64, 10 ** 4,
+                                     interpret=False)
+    np.testing.assert_array_equal(np.asarray(v_cmp), np.asarray(v_int))
+    np.testing.assert_array_equal(np.asarray(m_cmp), np.asarray(m_int))
+    assert pallas_mode(False) == "compiled"
+
+
+# ---- schema gating -----------------------------------------------------------
+
+def test_device_schema_on_host_channel_raises():
+    rt = NetRPC()
+
+    @inc.service(app="DP-gate", name="Host")
+    class HostSvc:
+        @inc.rpc(request_msg="N", reply_msg="A")
+        def Update(self, tensor: inc.Agg[inc.FPArray](precision=4)
+                   ) -> {"tensor": inc.Get[inc.FPArray]}: ...
+
+    @inc.service(app="DP-gate", name="Dev")
+    class DevSvc:
+        @inc.rpc(request_msg="N", reply_msg="A")
+        def Update(self, tensor: inc.Agg[inc.FPArray](
+                precision=4, device=True)
+                ) -> {"tensor": inc.Get[inc.FPArray]}: ...
+
+    rt.make_stub(HostSvc, n_slots=16)
+    with pytest.raises(ValueError, match="device"):
+        rt.make_stub(DevSvc, n_slots=16)
+    # ... while the reverse order is fine: a device channel serves host
+    # schemas (the registers are a superset capability)
+    rt2 = NetRPC()
+    rt2.make_stub(DevSvc, n_slots=16)
+    rt2.make_stub(HostSvc, n_slots=16)
+
+
+def test_device_option_requires_array_iedt():
+    from repro.core.schema import SchemaError
+    with pytest.raises(SchemaError):
+        inc.Agg[inc.STRINTMap](device=True)
+
+
+# ---- train-step integration (launch/steps.py) --------------------------------
+
+def test_train_telemetry_gradient_aggregation_device_resident():
+    from repro.launch.steps import TrainTelemetry
+    tel = TrainTelemetry(app_prefix="DP-train", grad_slots=64)
+    try:
+        grads = {"w": jnp.asarray(np.linspace(-1, 1, 12, dtype=np.float32)
+                                  .reshape(3, 4)),
+                 "b": jnp.asarray(np.array([0.5, -0.25, 0.125],
+                                           np.float32))}
+        out = tel.aggregate_gradients(grads)
+        # structure and residency preserved; values follow the dequant
+        # contract (raw = rint(g * scale) exactly, reciprocal multiply)
+        assert set(out) == {"w", "b"} and out["w"].shape == (3, 4)
+        assert isinstance(out["w"], jnp.ndarray)
+        scale = 10.0 ** 6
+        inv = np.float32(1.0) / np.float32(scale)
+        for k in out:
+            g = np.asarray(grads[k], np.float32)
+            raw = np.rint(g * np.float32(scale)).astype(np.int64)
+            np.testing.assert_array_equal(
+                np.asarray(out[k]), raw.astype(np.float32) * inv)
+    finally:
+        tel.rt.close()

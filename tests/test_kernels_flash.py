@@ -4,6 +4,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.backend import pallas_mode
 from repro.kernels.flash_attn import (flash_attention_chunked_ref,
                                       flash_attention_pallas)
 
@@ -25,6 +26,8 @@ def test_pallas_matches_oracle(case):
     q = jnp.asarray(rng.randn(b, h, s, d).astype(np.float32))
     k = jnp.asarray(rng.randn(b, kv, s, d).astype(np.float32))
     v = jnp.asarray(rng.randn(b, kv, s, d).astype(np.float32))
+    # this kernel pins interpret=True explicitly; say so on record
+    assert pallas_mode(True) == "interpret"
     got = flash_attention_pallas(q, k, v, causal=causal, block_q=bq,
                                  block_k=bk, interpret=True)
     want = ref.flash_attention(q, k, v, causal=causal)

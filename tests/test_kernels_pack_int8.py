@@ -5,6 +5,7 @@ import jax.numpy as jnp
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
+from repro.kernels.backend import pallas_mode
 from repro.kernels.pack_int8 import pack_int8_pallas, unpack_int8_pallas
 
 
@@ -12,6 +13,8 @@ from repro.kernels.pack_int8 import pack_int8_pallas, unpack_int8_pallas
 def test_matches_ref(rows):
     rng = np.random.RandomState(4)
     x = jnp.asarray(rng.randn(rows, 128).astype(np.float32))
+    # this kernel pair pins interpret=True explicitly; say so on record
+    assert pallas_mode(True) == "interpret"
     q, s = pack_int8_pallas(x, interpret=True)
     qr, sr = ref.pack_int8_block(x)
     np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))

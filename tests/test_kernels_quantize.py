@@ -1,7 +1,8 @@
 """Pallas quantize/dequantize kernels vs the pure-jnp oracle.
 
-Sweeps shapes/dtypes in interpret mode (the kernel body executes on CPU)
-and property-tests the fixed-point round-trip contract of paper §5.2.1.
+Sweeps shapes/dtypes in the backend-resolved mode (interpret on CPU,
+compiled on TPU/GPU — each test asserts which lane it exercised) and
+property-tests the fixed-point round-trip contract of paper §5.2.1.
 """
 import numpy as np
 import pytest
@@ -9,6 +10,7 @@ import jax.numpy as jnp
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
+from repro.kernels.backend import accelerator_present, pallas_mode
 from repro.kernels.constants import INT32_MAX, INT32_MIN, SAT_MAX, SAT_MIN
 from repro.kernels.dequantize import dequantize_pallas
 from repro.kernels.quantize import quantize_pallas
@@ -26,9 +28,12 @@ def test_quantize_matches_ref(shape, block_rows):
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(*shape).astype(np.float32) * 1e3)
     scale = jnp.float32(10.0 ** 4)
-    got = quantize_pallas(x, scale, block_rows=block_rows, interpret=True)
+    # default lane (backend-resolved); assert the mode this run exercised
+    got = quantize_pallas(x, scale, block_rows=block_rows)
     want = ref.quantize(x, scale)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert pallas_mode() == (
+        "compiled" if accelerator_present() else "interpret")
 
 
 @pytest.mark.parametrize("shape", SHAPES)
@@ -39,7 +44,9 @@ def test_dequantize_matches_ref(shape):
     # plant sentinels
     q = q.at[0, 0].set(INT32_MAX).at[-1, -1].set(INT32_MIN)
     scale = jnp.float32(100.0)
-    x, m = dequantize_pallas(q, scale, interpret=True)
+    x, m = dequantize_pallas(q, scale)
+    assert pallas_mode() == (
+        "compiled" if accelerator_present() else "interpret")
     xr, mr = ref.dequantize(q, scale)
     np.testing.assert_allclose(np.asarray(x), np.asarray(xr))
     np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
+from repro.kernels.backend import accelerator_present, pallas_mode
 from repro.kernels.constants import INT32_MAX, INT32_MIN, SAT_MAX, SAT_MIN
 from repro.kernels.inc_agg import sat_add_pallas
 
@@ -22,9 +23,13 @@ def test_pallas_matches_ref(shape):
                                 dtype=np.int64).astype(np.int32))
     b = jnp.asarray(rng.randint(-2**31, 2**31 - 1, size=shape,
                                 dtype=np.int64).astype(np.int32))
-    got = sat_add_pallas(a, b, interpret=True)
+    # default lane: backend-resolved, and the test records which mode a
+    # green run actually exercised (interpret on CPU, compiled on TPU/GPU)
+    got = sat_add_pallas(a, b)
     want = ref.sat_add(a, b)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert pallas_mode() == (
+        "compiled" if accelerator_present() else "interpret")
 
 
 vals = st.integers(SAT_MIN, SAT_MAX)

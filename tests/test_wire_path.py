@@ -22,6 +22,7 @@ Four angles:
 import os
 import sys
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -162,6 +163,53 @@ def test_spill_map_version_tracks_every_mutation():
         v = s.version
         mutate()
         assert s.version > v
+
+
+# ---- device-lane quantize: fused kernel == host oracle (ISSUE 6) -------------
+
+@pytest.mark.parametrize("precision", range(0, 9))
+def test_device_quantize_matches_host_across_signs_and_halfway(precision):
+    """The fused device kernel quantizes with jnp.round on a float32
+    product; the host lane uses np.rint on the same float32 product. For
+    every float32 input whose scaled value fits int32 the two are
+    element-identical — across signs, the round-half-to-even cliff, and
+    precisions 0-8. (float64 streams never reach the kernel: the phase-2
+    router host-quantizes them, pinned end-to-end in
+    tests/test_device_path.py.)"""
+    from repro.kernels.fused_gpv import fused_addto_pallas
+    scale = 10 ** precision
+    ks = np.arange(-25, 25)
+    rng = np.random.RandomState(precision)
+    xs = np.concatenate([
+        (ks + 0.5) / scale,                  # the halfway cliff, both signs
+        ks / scale,                          # exact integers
+        rng.uniform(-20.0, 20.0, 64),        # |x*scale| < 2**31 at p=8
+    ]).astype(np.float32)
+    want = quantize_stream(xs, scale)
+    # adding into a zeroed segment leaves exactly quantize(xs) behind
+    got = np.asarray(fused_addto_pallas(
+        jnp.zeros(len(xs), jnp.int32), 0, jnp.asarray(xs), scale,
+        interpret=True))
+    np.testing.assert_array_equal(got, want.astype(np.int32))
+
+
+def test_device_read_dequant_contract_and_sentinel_mask():
+    """The fused read reply is raw * (1/float32(scale)) — the reciprocal
+    multiply, NOT float division — with the overflow sentinels masked.
+    The host fallback in read_batch_dev computes the same formula, so the
+    two reply flavors are bit-identical."""
+    from repro.kernels.constants import INT32_MAX, INT32_MIN, SAT_MAX, \
+        SAT_MIN
+    from repro.kernels.fused_gpv import fused_read_pallas
+    raw = np.array([0, 5, -7, 123456789, INT32_MAX, INT32_MIN,
+                    SAT_MAX, SAT_MIN], np.int32)
+    vals, mask = fused_read_pallas(jnp.asarray(raw), 0, len(raw), 10 ** 6,
+                                   interpret=True)
+    inv = np.float32(1.0) / np.float32(10.0 ** 6)
+    np.testing.assert_array_equal(np.asarray(vals),
+                                  raw.astype(np.float32) * inv)
+    assert np.asarray(mask).tolist() == [False] * 4 + [True, True,
+                                                       False, False]
 
 
 # ---- fold_stream_host: one pass == Counter reference -------------------------
