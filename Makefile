@@ -2,7 +2,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast examples bench-batch bench-async bench-wire \
-	bench-shard bench-device
+	bench-shard bench-device bench-obs trace-shard
 
 # full tier-1 suite (includes the slow multidevice subprocess tests)
 test:
@@ -38,3 +38,13 @@ bench-shard:
 # device-resident GPV sweep: fused Pallas addto/read vs the host path
 bench-device:
 	python benchmarks/device_path.py --csv
+
+# observability overhead gate: disabled <= 2%, enabled <= 10% on the bulk
+# hot path, plus end-to-end snapshot/trace export validation
+bench-obs:
+	python benchmarks/obs_overhead.py
+
+# one traced workers=4 window -> benchmarks/TRACE_multi_channel.json
+# (load in Perfetto / chrome://tracing)
+trace-shard:
+	python benchmarks/multi_channel.py --trace

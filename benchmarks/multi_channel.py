@@ -153,6 +153,9 @@ def _drive(svcs: list, workers: int, duration: float,
         t.join()
     rt.drain()                      # flush the tail so close() is quick
     report = rt.scheduling_report()
+    # --trace runs export the full obs snapshot before the runtime goes
+    # away (per-channel drain-wait p99, switch CHR); None when obs is off
+    snap = rt.metrics_snapshot() if inc.obs.enabled() else None
     rt.close()
 
     done_in_window = {label: [lat for ts, lat in records[label]
@@ -168,7 +171,8 @@ def _drive(svcs: list, workers: int, duration: float,
             "p99_us_by_prio": p99,
             "completed": {label: len(v)
                           for label, v in done_in_window.items()},
-            "plane": report.get("__plane__", {})}
+            "plane": report.get("__plane__", {}),
+            "snapshot": snap}
 
 
 def run(duration: float = 0.8, repeats: int = 3,
@@ -246,6 +250,32 @@ def run(duration: float = 0.8, repeats: int = 3,
     return rows, acceptance
 
 
+def _traced_window(duration: float, service_us: float) -> None:
+    """``--trace``: one fully-observed workers=4 saturation window. The
+    span timeline (queued -> drain -> plane_lock -> pipeline phases ->
+    switch ops, one track per channel) lands in
+    benchmarks/TRACE_multi_channel.json — load it in Perfetto / Chrome
+    ``about:tracing`` — and the per-channel drain-wait p99 + switch CHR
+    come straight out of ``metrics_snapshot()``."""
+    from pathlib import Path
+    inc.obs.enable(trace=True, trace_stride=4)
+    try:
+        res = _drive(mk_services(), 4, duration, service_us)
+        snap = res["snapshot"]
+        out = Path(__file__).resolve().parent / "TRACE_multi_channel.json"
+        inc.obs.write_trace(out)
+        print(f"trace: {len(inc.obs.tracer())} events -> {out}")
+        for app, ch in sorted(snap["channels"].items()):
+            print(f"{app}: drain_wait_p99_us="
+                  f"{ch.get('drain_wait_p99_us', 0.0)}"
+                  f" latency_p99_us={ch.get('latency_p99_us', 0.0)}"
+                  f" CHR="
+                  f"{snap['switch']['apps'][app]['cache_hit_ratio']:.3f}")
+    finally:
+        inc.obs.disable()
+        inc.obs.reset()
+
+
 def main() -> None:
     import argparse
     ap = argparse.ArgumentParser()
@@ -253,12 +283,19 @@ def main() -> None:
                     help="tiny run for CI (correct plumbing, noisy numbers)")
     ap.add_argument("--csv", action="store_true",
                     help="append the rows to benchmarks/results.csv")
+    ap.add_argument("--trace", action="store_true",
+                    help="one traced workers=4 window instead of the sweep:"
+                         " writes benchmarks/TRACE_multi_channel.json"
+                         " (Perfetto-loadable) + the obs snapshot summary")
     ap.add_argument("--duration", type=float, default=0.8)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--service-us", type=float, default=SERVICE_US)
     args = ap.parse_args()
     duration = 0.4 if args.smoke else args.duration
     repeats = 1 if args.smoke else args.repeats
+    if args.trace:
+        _traced_window(duration, args.service_us)
+        return
     rows, acceptance = run(duration, repeats, args.service_us)
     lines = [",".join(str(x) for x in row) for row in rows]
     for ln in lines:

@@ -14,6 +14,13 @@ become one INC-map kernel batch; application code never schedules (or
 drains) anything.  The Query future is issued on the same channel, so
 FIFO order guarantees it observes every probe issued before it.
 
+This example also demonstrates the observability front door
+(docs/OBSERVABILITY.md): ``inc.obs.enable(trace=True)`` turns the
+data-plane metrics/tracing on, ``inc.metrics()`` records an
+application-level counter next to the built-in ones, ``inc.trace(...)``
+wraps the probe loop in a user span, and the run ends with the
+per-channel p99 latency from ``rt.metrics_snapshot()``.
+
     PYTHONPATH=src python -m examples.monitoring
 """
 import numpy as np
@@ -34,9 +41,13 @@ class Monitor:
 
 
 def main():
+    # observability on for the whole run: data-plane metrics + span
+    # tracing (every 4th coalesced batch lands on the trace timeline)
+    inc.obs.enable(trace=True, trace_stride=4)
     rt = inc.IncRuntime()
     rt.server.register("MonitorCall", lambda req: {"payload": "ack"})
     probe = rt.make_stub(Monitor, n_slots=512)
+    probes_sent = inc.metrics().counter("mon_probes_total")
 
     # synthetic zipf traffic: a few elephant flows, many mice. Probes go
     # through the futures front; the schema's size trigger turns every 16
@@ -44,14 +55,16 @@ def main():
     rng = np.random.RandomState(0)
     truth = {}
     futures = []
-    for _ in range(200):
-        flows = rng.zipf(1.4, 64) % 2000
-        kvs = {}
-        for f in flows:
-            key = f"flow-{f}"
-            kvs[key] = kvs.get(key, 0) + 1
-            truth[key] = truth.get(key, 0) + 1
-        futures.append(probe.MonitorCall(kvs=kvs, payload="probe"))
+    with inc.trace("probe_burst", n=200):
+        for _ in range(200):
+            flows = rng.zipf(1.4, 64) % 2000
+            kvs = {}
+            for f in flows:
+                key = f"flow-{f}"
+                kvs[key] = kvs.get(key, 0) + 1
+                truth[key] = truth.get(key, 0) + 1
+            probes_sent.inc()
+            futures.append(probe.MonitorCall(kvs=kvs, payload="probe"))
 
     # the monitor reads at any time; the Query rides the same channel
     # queue, so it drains behind all 200 probes (.result() demand-flushes)
@@ -68,8 +81,20 @@ def main():
     print(f"auto-drain: {sched['drained_calls']} calls in "
           f"{sched['drained_batches']} batches (triggers {sched['drains']}), "
           f"mean batch {sched['mean_drained_batch']}")
+
+    # the obs exports: per-channel latency quantiles + the app counter
+    snap = rt.metrics_snapshot()
+    mon = snap["channels"]["MON-1"]
+    probes = snap["metrics"]["counters"]["mon_probes_total"]
+    print(f"obs: {probes} probes; submit->resolve "
+          f"p50={mon.get('latency_p50_us', 0.0)}us "
+          f"p99={mon.get('latency_p99_us', 0.0)}us; "
+          f"CHR={snap['switch']['apps']['MON-1']['cache_hit_ratio']:.3f}; "
+          f"{len(inc.obs.tracer())} trace events recorded")
     print("== every counter exact (switch + host-spill fallback)")
     rt.close()
+    inc.obs.disable()
+    inc.obs.reset()
 
 
 if __name__ == "__main__":

@@ -87,6 +87,65 @@ fi
 rm -f "$smoke_log"
 echo "device_path smoke: OK"
 
+# smoke the observability overhead gate (tiny n; the timing gates are
+# noisy at smoke scale, but the export-validation leg is exact: snapshot
+# vs scripts/obs_schema.json, quantile/CHR keys, Chrome trace shape)
+smoke_log=$(mktemp)
+if ! timeout 300 python -m benchmarks.obs_overhead --smoke > "$smoke_log" 2>&1; then
+    echo "FAST LANE: FAIL (obs_overhead smoke); output:"
+    cat "$smoke_log"
+    rm -f "$smoke_log"
+    exit 1
+fi
+rm -f "$smoke_log"
+echo "obs_overhead smoke: OK"
+
+# obs lane: the exports users consume must hold their published shapes —
+# a live traced runtime's metrics_snapshot() validates against the
+# checked-in scripts/obs_schema.json and the Chrome trace JSON validates
+# as Perfetto-loadable; the committed full-run BENCH_obs_overhead.json
+# must exist with a passing verdict (re-run `make bench-obs` when the
+# instrumentation changes).
+if ! timeout 120 python - <<'EOF'
+import json
+import pathlib
+import sys
+
+import repro.api as inc
+from repro.obs import schema as obs_schema
+from repro.obs.trace import validate_chrome_trace
+
+inc.obs.enable(trace=True)
+with inc.IncRuntime(workers=2) as rt:
+    from benchmarks.agg_goodput import BatchBench, _batch_requests
+    stub = rt.make_stub(BatchBench, n_slots=8192)
+    futs = [stub.Push(**r) for r in _batch_requests(64)]
+    rt.drain()
+    for f in futs:
+        f.result()
+    snap = rt.metrics_snapshot()
+obs_schema.validate(snap, obs_schema.load("scripts/obs_schema.json"))
+assert "latency_p99_us" in snap["channels"]["BB-1"], "p99 missing"
+assert "cache_hit_ratio" in snap["switch"]["apps"]["BB-1"], "CHR missing"
+validate_chrome_trace(inc.obs.chrome_trace())
+inc.obs.disable()
+inc.obs.reset()
+
+f = pathlib.Path("benchmarks/BENCH_obs_overhead.json")
+assert f.exists(), f"{f} missing — run `make bench-obs` and commit it"
+acc = json.loads(f.read_text())["acceptance"]
+assert acc["verdict"].startswith("PASS"), \
+    f"committed obs gate verdict: {acc['verdict']}"
+print("obs lane: snapshot schema OK, chrome trace OK, "
+      f"committed gate {acc['verdict']} "
+      f"(disabled {acc['disabled_overhead_pct']}%, "
+      f"enabled {acc['enabled_overhead_pct']}%)")
+EOF
+then
+    echo "FAST LANE: FAIL (obs lane)"
+    exit 1
+fi
+
 # bench trajectory export: every BENCH_*.json must parse and carry the
 # (bench, config, rows, acceptance) shape. The three benches smoked above
 # write gitignored BENCH_smoke_*.json (so the committed full-run
@@ -107,13 +166,14 @@ for f in files:
     for key in ("bench", "config", "rows", "acceptance"):
         assert key in d, f"{f}: missing {key!r}"
     assert isinstance(d["rows"], list) and d["rows"], f"{f}: empty rows"
-for name in ("async_latency", "wire_path", "multi_channel", "device_path"):
+for name in ("async_latency", "wire_path", "multi_channel", "device_path",
+             "obs_overhead"):
     f = pathlib.Path(f"benchmarks/BENCH_smoke_{name}.json")
     assert f.exists(), f"{f}: the smoked bench exported nothing"
     assert f.stat().st_mtime >= stamp, \
         f"{f}: stale — this lane's smoke did not rewrite it"
 print(f"bench trajectory: {len(files)} BENCH_*.json parse OK, "
-      f"4 smoke exports fresh")
+      f"5 smoke exports fresh")
 EOF
 then
     echo "FAST LANE: FAIL (BENCH_*.json export)"

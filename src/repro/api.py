@@ -24,7 +24,13 @@ for inline execution) and their ``DrainPolicy`` knobs, and ``IncFuture``
 The legacy string-keyed surface (``Service``/``Field``/``NetFilter`` +
 ``Stub.call``/``call_batch``) is re-exported as the compatibility shim
 the schema layer compiles down to; new code should not need it.
+
+Observability (``repro.obs``, docs/OBSERVABILITY.md) rides along:
+``inc.obs.enable()`` turns the data-plane metrics/tracing on,
+``inc.metrics()`` is the process-wide registry for application metrics,
+and ``inc.trace("span")`` opens a user span on the exported timeline.
 """
+from repro import obs
 from repro.core.netfilter import NetFilter
 from repro.core.rpc import Field, IncFuture, NetRPC, Service, Stub
 from repro.core.runtime import DrainPolicy, IncRuntime
@@ -41,6 +47,25 @@ __all__ = [
     "BoundRpc",
     # runtimes + futures
     "IncRuntime", "NetRPC", "DrainPolicy", "IncFuture",
+    # observability front door
+    "obs", "metrics", "trace",
     # legacy compatibility shim
     "Service", "Field", "Stub", "NetFilter",
 ]
+
+
+def metrics():
+    """The process-wide metrics registry (``repro.obs``): get-or-create
+    handles via ``inc.metrics().counter("name", **labels)`` / ``gauge`` /
+    ``histogram``. Recording is a no-op until ``inc.obs.enable()``."""
+    return obs.registry()
+
+
+def trace(name: str, **args):
+    """User span on the exported timeline::
+
+        with inc.trace("train_step", step=i):
+            ...
+
+    No-op unless tracing is on (``inc.obs.enable(trace=True)``)."""
+    return obs.trace_span(name, **args)

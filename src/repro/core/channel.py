@@ -76,7 +76,13 @@ class ChannelStats:
         self.max_queue_depth = max(self.max_queue_depth, depth)
 
     def note_trigger(self, trigger: str) -> None:
-        self.drain_triggers[trigger] = self.drain_triggers.get(trigger, 0) + 1
+        # strict: a typo'd trigger name in a new drain path must fail loudly
+        # instead of silently growing a phantom row in the report
+        if trigger not in self.drain_triggers:
+            raise ValueError(
+                f"unknown drain trigger {trigger!r}; known triggers: "
+                f"{DRAIN_TRIGGERS}")
+        self.drain_triggers[trigger] += 1
 
     def check_consistent(self) -> None:
         """Every pipeline pass is attributed to exactly one source, so the

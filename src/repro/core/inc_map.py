@@ -41,6 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.obs import hooks as _obs
+from repro.obs import trace as _trace
 
 LOGICAL_BITS = 32
 CACHE_POLICIES = ("netrpc-lru", "fcfs", "hash", "pon")
@@ -292,6 +294,23 @@ class SwitchMemory:
             part = self.partitions.pop(gaid, None)
             if part and part[0] + part[1] == self._next_free:
                 self._next_free = part[0]
+
+    def occupancy(self) -> list[dict]:
+        """Per-Segment allocation snapshot for the observability exports
+        (scheduling_report's ``"__switch__"`` section): how many of each
+        segment's slots are covered by reserved partitions, and whether
+        the segment is device-resident. Deliberately allocation-based —
+        counting nonzero registers would force a device sync per
+        DeviceSegment on every monitoring poll."""
+        with self._alloc_lock:
+            next_free = self._next_free
+        out = []
+        for i, seg in enumerate(self.segments):
+            used = min(max(next_free - i * self.seg_slots, 0),
+                       self.seg_slots)
+            out.append({"segment": i, "slots": self.seg_slots,
+                        "allocated": used, "device": bool(seg.device)})
+        return out
 
     def _locate(self, phys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         return phys // self.seg_slots, phys % self.seg_slots
@@ -603,6 +622,7 @@ class ServerAgent:
         n = len(logical)
         if n == 0:
             return
+        t0_us = _trace.now_us() if _obs.TRACE else 0.0
         q = logical.astype(np.int64)
         hit, slotv = self._map_lookup(q)
         n_hit = int(hit.sum())
@@ -620,6 +640,8 @@ class ServerAgent:
             miss = ~hit
             self._route_miss(logical[miss], vals[miss])
         self._account(logical, n)
+        if _obs.TRACE:
+            _obs.switch_op("addto", n, t0_us)
 
     def _route_miss(self, lmiss: np.ndarray, vmiss: np.ndarray) -> None:
         """Fold missed (logical, value) updates into the host spill and
@@ -664,6 +686,7 @@ class ServerAgent:
         n = len(logical)
         if n == 0:
             return
+        t0_us = _trace.now_us() if _obs.TRACE else 0.0
         q = logical.astype(np.int64)
         hit, slotv = self._map_lookup(q)
         n_hit = int(hit.sum())
@@ -680,6 +703,8 @@ class ServerAgent:
             self._route_miss(logical[miss],
                              quantize_stream(fvals[miss], scale))
         self._account(logical, n)
+        if _obs.TRACE:
+            _obs.switch_op("addto_f32", n, t0_us)
 
     @_locked
     def read_batch_dev(self, logical: np.ndarray, scale,
@@ -697,6 +722,7 @@ class ServerAgent:
         if n == 0:
             raw = np.zeros(0, np.int64) if need_raw else None
             return jnp.zeros(0, jnp.float32), raw
+        t0_us = _trace.now_us() if _obs.TRACE else 0.0
         q = logical.astype(np.int64)
         spill_hit = False
         if self.spill:
@@ -709,6 +735,8 @@ class ServerAgent:
                 vals, raw32 = self.switch.read_f32(
                     self.base + slotv, scale, need_raw=need_raw)
                 raw = raw32.astype(np.int64) if need_raw else None
+                if _obs.TRACE:
+                    _obs.switch_op("read_dev", n, t0_us)
                 return vals, raw
         raw = self.read_batch(logical)
         inv = np.float32(1.0) / np.float32(scale)
@@ -746,6 +774,7 @@ class ServerAgent:
         out = np.zeros(n, np.int64)
         if n == 0:
             return out
+        t0_us = _trace.now_us() if _obs.TRACE else 0.0
         q = logical.astype(np.int64)
         if self.spill:
             skeys, svals = self._spill_arrays()
@@ -758,6 +787,8 @@ class ServerAgent:
             if hit.any():
                 out[hit] += self.switch.get(
                     self.base + slotv[hit]).astype(np.int64)
+        if _obs.TRACE:
+            _obs.switch_op("read", n, t0_us)
         return out
 
     @_locked

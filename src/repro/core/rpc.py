@@ -80,6 +80,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -90,6 +91,8 @@ from repro.core.clear_policy import POLICIES
 from repro.core.inc_map import hash_key, quantize_stream, quantize_values
 from repro.core.netfilter import NetFilter
 from repro.kernels import ref
+from repro.obs import hooks as _obs
+from repro.obs import trace as _trace
 
 # -- IEDTs -------------------------------------------------------------------
 
@@ -354,18 +357,63 @@ def _run_pipeline(channel: Channel, host_server: Server,
     runtime-coalesced ("drained") counters so coalescing efficiency is not
     diluted by interleaved N=1 Stub.call passes on the same channel.
     """
-    if not channel.plane.acquire(timeout=PLANE_LOCK_TIMEOUT):
-        raise RuntimeError(
-            f"pipeline pass on channel {channel.netfilter.app_name!r} "
-            f"could not take the channel plane lock within "
-            f"{PLANE_LOCK_TIMEOUT:.0f}s — likely a cyclic cross-channel "
-            f"handler call graph (a handler on A calling B while a "
-            f"handler on B calls A); break the cycle or use call_async "
-            f"for the follow-up")
+    if not (_obs.METRICS or _obs.TRACE):
+        # the zero-overhead default: one module-global bool load + branch,
+        # then exactly the pre-obs pass
+        if not channel.plane.acquire(timeout=PLANE_LOCK_TIMEOUT):
+            raise _plane_lock_timeout(channel)
+        try:
+            return _run_pipeline_locked(channel, host_server, calls, source)
+        finally:
+            channel.plane.release()
+    return _run_pipeline_observed(channel, host_server, calls, source)
+
+
+def _plane_lock_timeout(channel: Channel) -> RuntimeError:
+    return RuntimeError(
+        f"pipeline pass on channel {channel.netfilter.app_name!r} "
+        f"could not take the channel plane lock within "
+        f"{PLANE_LOCK_TIMEOUT:.0f}s — likely a cyclic cross-channel "
+        f"handler call graph (a handler on A calling B while a "
+        f"handler on B calls A); break the cycle or use call_async "
+        f"for the follow-up")
+
+
+def _run_pipeline_observed(channel: Channel, host_server: Server,
+                           calls: list[_PlannedCall],
+                           source: str) -> list[dict]:
+    """Instrumented twin of the fast path in ``_run_pipeline``: same lock
+    discipline and error semantics, plus plane-lock-wait / pass-duration /
+    GPV-coverage metrics and a sampled batch span. If the runtime's drain
+    worker already opened a batch span, ``maybe_start`` returns None and
+    the phase markers below join the enclosing span's context."""
+    app = channel.netfilter.app_name
+    ctx = _trace.maybe_start("pipeline", app, n=len(calls),
+                             source=source) if _obs.TRACE else None
+    t_wait = time.perf_counter()
+    acquired = channel.plane.acquire(timeout=PLANE_LOCK_TIMEOUT)
+    t0 = time.perf_counter()
+    if not acquired:
+        _trace.end(ctx)
+        raise _plane_lock_timeout(channel)
     try:
-        return _run_pipeline_locked(channel, host_server, calls, source)
+        if ctx is not None:
+            _trace.phase("plane_lock", t_wait * 1e6)
+        gpv_c0 = channel.stats.gpv_calls
+        gpv_e0 = channel.stats.gpv_elems
+        try:
+            return _run_pipeline_locked(channel, host_server, calls, source)
+        finally:
+            if _obs.METRICS:
+                _obs.plane_wait(app, (t0 - t_wait) * 1e6)
+                _obs.pipeline_pass(app, len(calls), source, t0)
+                dg = channel.stats.gpv_calls - gpv_c0
+                _obs.gpv_coverage(app, dg,
+                                  channel.stats.gpv_elems - gpv_e0,
+                                  len(calls) - dg)
     finally:
         channel.plane.release()
+        _trace.end(ctx)
 
 
 def _run_pipeline_locked(channel: Channel, host_server: Server,
@@ -388,6 +436,11 @@ def _run_pipeline_locked(channel: Channel, host_server: Server,
     else:
         channel.stats.explicit_calls += len(calls)
         channel.stats.explicit_batches += 1
+    # per-phase spans land on the sampled batch context (if any); ``trc``
+    # short-circuits on the module-global bool so the disabled path pays
+    # one load + branch here and a falsy local check per phase
+    trc = _obs.TRACE and _trace.current() is not None
+    t_ph = _trace.now_us() if trc else 0.0
 
     # ---- phase 1: Stream.modify, fused across the batch --------------------
     for c in calls:
@@ -439,6 +492,9 @@ def _run_pipeline_locked(channel: Channel, host_server: Server,
                 s = 10 ** c.nf.precision
                 c.items = dict(zip(c.items.keys(), out / s))
             pos += len(seg)
+    if trc:
+        _trace.phase("stream_modify", t_ph)
+        t_ph = _trace.now_us()
 
     # ---- phase 2: client-side logical-address resolution --------------------
     for c in calls:
@@ -461,6 +517,9 @@ def _run_pipeline_locked(channel: Channel, host_server: Server,
             else:
                 c.logs, c.vals, c.spills = c.agent.resolve(c.items,
                                                            c.nf.precision)
+    if trc:
+        _trace.phase("resolve_addrs", t_ph)
+        t_ph = _trace.now_us()
 
     # ---- phase 3: CntFwd gating (simulated over pre-batch counters) ---------
     # Counter keys are disjoint from data keys, so the per-tag count at any
@@ -489,6 +548,9 @@ def _run_pipeline_locked(channel: Channel, host_server: Server,
             if c.forwarded and c.nf.clear != "nop":
                 c.counter_ops.append((key, -cnt))
                 sim[key] = 0
+    if trc:
+        _trace.phase("cntfwd_gate", t_ph)
+        t_ph = _trace.now_us()
 
     # ---- phase 4: ordered execution with lazy flushing ----------------------
     # The final flush runs even if a handler raises mid-batch, so calls that
@@ -584,6 +646,8 @@ def _run_pipeline_locked(channel: Channel, host_server: Server,
     finally:
         channel.active_buf = prev_buf
         buf.flush()
+        if trc:
+            _trace.phase("execute", t_ph)
     return [c.reply for c in calls]
 
 

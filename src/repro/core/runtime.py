@@ -75,6 +75,10 @@ from repro.core.channel import Channel
 from repro.core.rpc import (IncFuture, NetRPC, Stub, _run_pipeline,
                             resolve_futures)
 from repro.core.transport import AimdState, W_MAX_DEFAULT
+from repro.obs import hooks as _obs
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+from repro.obs.metrics import Histogram
 
 
 @dataclass
@@ -122,7 +126,8 @@ class _ChannelQueue:
 
     __slots__ = ("channel", "policy", "entries", "aimd", "occupancy",
                  "busy_owner", "demand", "last_service", "backlog_limit",
-                 "wake", "deficit", "last_worker", "drain_waits")
+                 "wake", "deficit", "last_worker", "drain_waits",
+                 "h_wait", "h_lat")
 
     def __init__(self, channel: Channel, policy: DrainPolicy, now: float):
         if not (policy.weight > 0):      # rejects NaN too, not just <= 0
@@ -145,6 +150,13 @@ class _ChannelQueue:
         self.deficit = 0.0                 # DRR credit within the tier
         self.last_worker: int | None = None
         self.drain_waits: list = [0, 0.0, 0.0]   # [drains, wait_sum, max]
+        # standalone obs histograms (repro.obs), deliberately NOT in the
+        # process-wide registry: tests and benches spin up many runtimes
+        # reusing app names, and one runtime's p99 must not absorb
+        # another's samples. Populated only while obs metrics are enabled;
+        # scheduling_report()/metrics_snapshot() surface the quantiles.
+        self.h_wait = Histogram("drain_wait_us")      # oldest-entry age
+        self.h_lat = Histogram("submit_latency_us")   # submit -> resolve
 
     def room(self) -> int:
         return max(0, self.aimd.cw - int(self.occupancy))
@@ -451,32 +463,8 @@ class IncRuntime(NetRPC):
         for gaid, q in queues:
             with q.channel.plane:
                 with self._work:
-                    st = q.channel.stats
-                    st.check_consistent()
-                    drains, wait_sum, wait_max = q.drain_waits
-                    out[q.channel.netfilter.app_name] = {
-                        "gaid": gaid,
-                        "queue_depth": len(q.entries),
-                        "max_queue_depth": st.max_queue_depth,
-                        "cw": q.aimd.cw,
-                        "occupancy": round(q.occupancy, 1),
-                        "drains": dict(st.drain_triggers),
-                        "calls": st.calls,
-                        "explicit_calls": st.explicit_calls,
-                        "drained_calls": st.drained_calls,
-                        "drained_batches": st.drained_batches,
-                        "mean_drained_batch": round(st.mean_drained_batch,
-                                                    2),
-                        "admission_waits": st.admission_waits,
-                        "gpv_calls": st.gpv_calls,
-                        "gpv_elems": st.gpv_elems,
-                        "priority": q.policy.priority,
-                        "weight": q.policy.weight,
-                        "deficit": round(q.deficit, 2),
-                        "mean_drain_wait_us": round(
-                            wait_sum / drains * 1e6, 1) if drains else 0.0,
-                        "max_drain_wait_us": round(wait_max * 1e6, 1),
-                    }
+                    out[q.channel.netfilter.app_name] = \
+                        self._channel_entry(gaid, q)
         with self._work:
             out["__plane__"] = {
                 "workers": {f"w{i}": dict(s)
@@ -490,7 +478,99 @@ class IncRuntime(NetRPC):
                     for p, s in sorted(self._prio_stats.items())},
                 "pick_contention": self._pick_contention,
             }
+        out["__switch__"] = self._switch_report()
         return out
+
+    def _channel_entry(self, gaid: int, q: _ChannelQueue) -> dict:
+        """One channel's report entry. Caller holds the channel's plane
+        lock and _work (in that order). Shared by scheduling_report()
+        and metrics_snapshot() so the two exports cannot drift."""
+        st = q.channel.stats
+        st.check_consistent()
+        drains, wait_sum, wait_max = q.drain_waits
+        entry = {
+            "gaid": gaid,
+            "queue_depth": len(q.entries),
+            "max_queue_depth": st.max_queue_depth,
+            "cw": q.aimd.cw,
+            "occupancy": round(q.occupancy, 1),
+            "drains": dict(st.drain_triggers),
+            "calls": st.calls,
+            "explicit_calls": st.explicit_calls,
+            "drained_calls": st.drained_calls,
+            "drained_batches": st.drained_batches,
+            "mean_drained_batch": round(st.mean_drained_batch, 2),
+            "admission_waits": st.admission_waits,
+            "gpv_calls": st.gpv_calls,
+            "gpv_elems": st.gpv_elems,
+            "priority": q.policy.priority,
+            "weight": q.policy.weight,
+            "deficit": round(q.deficit, 2),
+            "mean_drain_wait_us": round(
+                wait_sum / drains * 1e6, 1) if drains else 0.0,
+            "max_drain_wait_us": round(wait_max * 1e6, 1),
+            "acks": q.aimd.acks,
+            "ecn_marks": q.aimd.ecn_marks,
+        }
+        # obs histograms (populated only while metrics are enabled): the
+        # per-channel latency story the mean/max pair above cannot tell
+        if q.h_wait.count:
+            entry["drain_wait_p50_us"] = round(q.h_wait.quantile(0.5), 1)
+            entry["drain_wait_p99_us"] = round(q.h_wait.quantile(0.99), 1)
+        if q.h_lat.count:
+            entry["latency_p50_us"] = round(q.h_lat.quantile(0.5), 1)
+            entry["latency_p99_us"] = round(q.h_lat.quantile(0.99), 1)
+        return entry
+
+    def _switch_report(self) -> dict:
+        """The shared switch's story (the ``"__switch__"`` report
+        section): per-app server-agent cache behavior (hits/misses/CHR,
+        spill size, partition) plus switch-wide slot occupancy per
+        Segment. Reads live counters without locks — the numbers are a
+        monitoring snapshot, not a consistency audit."""
+        sw = self.controller.switch
+        apps = {}
+        with self._work:
+            queues = list(self._queues.values())
+        known = {q.channel.gaid for q in queues}
+        channels = list(self.controller.channels.values())
+        for ch in channels:
+            srv = ch.server
+            apps[ch.netfilter.app_name] = {
+                "gaid": ch.gaid,
+                "hits": srv.hits,
+                "misses": srv.misses,
+                "cache_hit_ratio": round(srv.cache_hit_ratio, 4),
+                "spill_keys": len(srv.spill),
+                "capacity": srv.capacity,
+                "inc_bytes": ch.stats.inc_bytes,
+                "host_bytes": ch.stats.host_bytes,
+                "scheduled": ch.gaid in known,
+            }
+        return {
+            "apps": apps,
+            "total_slots": sw.total_slots,
+            "allocated_slots": sum(n for _, n in sw.partitions.values()),
+            "segments": sw.occupancy(),
+        }
+
+    def metrics_snapshot(self) -> dict:
+        """The exportable obs snapshot (schema ``repro.obs/v1``,
+        validated in CI against scripts/obs_schema.json): the per-channel
+        scheduling entries (with drain-wait / submit-latency quantiles
+        when obs metrics were enabled), the plane and switch sections,
+        and the process-wide metrics registry."""
+        rep = self.scheduling_report()
+        plane = rep.pop("__plane__")
+        switch = rep.pop("__switch__")
+        return {
+            "schema": _metrics.SCHEMA_VERSION,
+            "enabled": _obs.METRICS,
+            "channels": rep,
+            "plane": plane,
+            "switch": switch,
+            "metrics": _metrics.REGISTRY.snapshot(),
+        }
 
     # -- scheduler internals -------------------------------------------------
 
@@ -657,6 +737,18 @@ class IncRuntime(NetRPC):
         ch = q.channel
         exc = None
         t_start = self._clock()
+        ctx = None
+        t_drain_us = 0.0
+        if _obs.TRACE:
+            app = ch.netfilter.app_name
+            ctx = _trace.maybe_start("drain", app, n=len(entries),
+                                     trigger=trigger)
+            if ctx is not None:
+                # the queue-side story on the channel's synthetic track:
+                # a "queued" span ending now, then the drain span below
+                _trace.queued_event(app, t_start - entries[0][2],
+                                    len(entries), trigger)
+                t_drain_us = _trace.now_us()
         try:
             self._run_plane(lambda: _run_pipeline(
                 ch, self.server, [p for _, p, _ in entries],
@@ -676,11 +768,27 @@ class IncRuntime(NetRPC):
             # through service, as the transport persists ECN in the map).
             # AIMD state is per channel and only ever touched under _work,
             # so concurrent drains on other channels cannot race it.
-            q.aimd.on_ack(q.occupancy >= q.policy.ecn_threshold)
+            ecn = q.occupancy >= q.policy.ecn_threshold
+            q.aimd.on_ack(ecn)
             q.backlog_limit = q.policy.backlog_limit(q.aimd.cw)
             ch.stats.note_trigger(trigger)
+        if _obs.METRICS:
+            # recorded BEFORE the futures resolve: a caller woken by its
+            # future may snapshot immediately, and the batch that woke it
+            # must already be in the histograms
+            app = ch.netfilter.app_name
+            t_done = self._clock()
+            q.h_wait.observe(max(0.0, t_start - entries[0][2]) * 1e6)
+            q.h_lat.observe_many(
+                [(t_done - ts) * 1e6 for _, _, ts in entries])
+            _obs.drain_trigger(app, trigger)
+            _obs.aimd_update(app, q.aimd.cw, ecn)
         # the worker loop deliberately swallows the return value, so
         # the outcome (including a trailing-flush failure, charged to the
         # last call) must be fully delivered through the futures
         resolve_futures([(fut, p) for fut, p, _ in entries], exc)
+        if ctx is not None:
+            _trace.drain_event(ch.netfilter.app_name, t_drain_us,
+                               len(entries), trigger)
+            _trace.end(ctx)
         return exc

@@ -100,9 +100,15 @@ class AimdState:
     multiplicative: float = 0.5
     cw_min: int = 1
     cw_max: int = W_MAX_DEFAULT
+    # lifetime counters (repro.obs surfaces them: the cw-evolution story
+    # is unreadable without knowing how many acks were congestion marks)
+    acks: int = 0
+    ecn_marks: int = 0
 
     def on_ack(self, ecn: bool) -> None:
+        self.acks += 1
         if ecn:
+            self.ecn_marks += 1
             self.cw = max(self.cw_min, int(self.cw * self.multiplicative))
         else:
             self.cw = min(self.cw_max, self.cw + self.additive)

@@ -33,6 +33,8 @@ so one compiled kernel serves every (segment shape, stream shape) pair.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -40,6 +42,7 @@ from jax.experimental import pallas as pl
 from repro.kernels.backend import resolve_interpret
 from repro.kernels.constants import INT32_MAX, INT32_MIN, SAT_MAX, SAT_MIN
 from repro.kernels.inc_agg import _sat_add_block
+from repro.obs import hooks as _obs
 
 
 def _quantize_block(x, scale):
@@ -74,7 +77,8 @@ def fused_addto_pallas(regs: jax.Array, start: jax.Array, fvals: jax.Array,
     """
     n_slots = regs.shape[0]
     n = fvals.shape[0]
-    return pl.pallas_call(
+    t0 = time.perf_counter() if _obs.METRICS else 0.0
+    out = pl.pallas_call(
         _fused_addto_kernel,
         out_shape=jax.ShapeDtypeStruct((n_slots,), jnp.int32),
         in_specs=[
@@ -88,6 +92,9 @@ def fused_addto_pallas(regs: jax.Array, start: jax.Array, fvals: jax.Array,
     )(jnp.asarray(start, jnp.int32).reshape(1),
       jnp.asarray(scale, jnp.float32).reshape(1),
       fvals.astype(jnp.float32), regs.astype(jnp.int32))
+    if _obs.METRICS:
+        _obs.kernel_launch("fused_addto", n, t0)
+    return out
 
 
 def _fused_scatter_kernel(scale_ref, idx_ref, val_ref, regs_ref, out_ref):
@@ -113,7 +120,8 @@ def fused_scatter_pallas(regs: jax.Array, idx: jax.Array, fvals: jax.Array,
     all). Padding with (idx=0, fval=0.0) is a no-op update."""
     n_slots = regs.shape[0]
     k = idx.shape[0]
-    return pl.pallas_call(
+    t0 = time.perf_counter() if _obs.METRICS else 0.0
+    out = pl.pallas_call(
         _fused_scatter_kernel,
         out_shape=jax.ShapeDtypeStruct((n_slots,), jnp.int32),
         in_specs=[
@@ -126,6 +134,9 @@ def fused_scatter_pallas(regs: jax.Array, idx: jax.Array, fvals: jax.Array,
         interpret=resolve_interpret(interpret),
     )(jnp.asarray(scale, jnp.float32).reshape(1), idx.astype(jnp.int32),
       fvals.astype(jnp.float32), regs.astype(jnp.int32))
+    if _obs.METRICS:
+        _obs.kernel_launch("fused_scatter", k, t0)
+    return out
 
 
 def _fused_read_kernel(start_ref, inv_ref, regs_ref, val_ref, mask_ref):
@@ -147,7 +158,8 @@ def fused_read_pallas(regs: jax.Array, start: jax.Array, n: int,
     host-fallback replies bit-identical."""
     n_slots = regs.shape[0]
     inv = jnp.float32(1.0) / jnp.asarray(scale, jnp.float32)
-    return pl.pallas_call(
+    t0 = time.perf_counter() if _obs.METRICS else 0.0
+    out = pl.pallas_call(
         _fused_read_kernel,
         out_shape=(
             jax.ShapeDtypeStruct((n,), jnp.float32),
@@ -165,3 +177,6 @@ def fused_read_pallas(regs: jax.Array, start: jax.Array, n: int,
         interpret=resolve_interpret(interpret),
     )(jnp.asarray(start, jnp.int32).reshape(1), inv.reshape(1),
       regs.astype(jnp.int32))
+    if _obs.METRICS:
+        _obs.kernel_launch("fused_read", n, t0)
+    return out

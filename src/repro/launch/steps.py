@@ -36,6 +36,7 @@ from jax.sharding import PartitionSpec as P
 import repro.api as inc
 from repro import compat
 from repro.api import DrainPolicy, IncFuture, IncRuntime
+from repro.obs import hooks as _obs
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import inc_agg
 from repro.core.inc_agg import IncAggConfig
@@ -151,17 +152,23 @@ class TrainTelemetry:
 
     def _on_commit(self, req: dict) -> dict:
         self._commits += 1
+        if _obs.METRICS:
+            inc.metrics().counter("train_commits_total").inc()
         return {"msg": "commit"}
 
     def push(self, scalars: dict[str, float]) -> IncFuture:
         """Accumulate metric scalars in-network; returns the push future."""
         self._names.update(scalars)
         kvs = {k: float(v) for k, v in scalars.items()}
+        if _obs.METRICS:
+            inc.metrics().counter("train_metric_pushes_total").inc()
         return self.metrics.PushMetrics(kvs=kvs)
 
     def vote(self, step: int) -> IncFuture:
         """Cast this worker's commit vote for ``step``; the future's reply
         is non-empty iff this vote completed the quorum."""
+        if _obs.METRICS:
+            inc.metrics().counter("train_votes_total").inc()
         f = self.agree.CommitStep(kvs={f"step-{step}": 1})
         self._last_vote = f
         return f
@@ -173,6 +180,13 @@ class TrainTelemetry:
         if self.grads is None:
             raise RuntimeError("TrainTelemetry built without grad_slots; "
                                "pass grad_slots=<flat gradient length>")
+        if _obs.METRICS:
+            reg = inc.metrics()
+            n = int(getattr(flat_grad, "size", len(flat_grad)))
+            reg.counter("train_grad_pushes_total").inc()
+            reg.counter("train_grad_elems_total").inc(n)
+            reg.histogram("train_grad_block_elems",
+                          buckets=_obs._N).observe(n)
         return self.grads.PushGrads(grads=flat_grad)
 
     def aggregate_gradients(self, grads):
@@ -211,10 +225,14 @@ class TrainTelemetry:
         return self._commits
 
     def finish(self) -> dict:
-        """Flush, summarize, and (if owned) stop the runtime."""
+        """Flush, summarize, and (if owned) stop the runtime. With obs
+        metrics enabled the summary carries the full ``repro.obs/v1``
+        snapshot (per-channel latency quantiles, registry metrics)."""
         summary = {"metrics": self.read(),
                    "commits": self.commits(),
                    "scheduling": self.rt.scheduling_report()}
+        if _obs.METRICS:
+            summary["obs"] = self.rt.metrics_snapshot()
         if self._own_rt:
             self.rt.close()
         return summary

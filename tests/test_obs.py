@@ -1,0 +1,390 @@
+"""repro.obs (ISSUE 7): metrics registry, span tracing, and the
+exportable telemetry surface.
+
+The load-bearing properties:
+
+  - Histogram arithmetic is exact: le-bucket boundary semantics,
+    ``observe_many`` ≡ a loop of ``observe``, ``merge`` preserves every
+    moment, and concurrent writers (4 threads on one striped lock) lose
+    nothing.
+  - The trace ring is bounded: wraparound drops the oldest events and
+    counts them; the export always validates as Chrome trace-event JSON.
+  - Identity: the SAME workload run with obs off and obs fully on
+    produces byte-identical replies and final INC-map state — the
+    instrumentation observes the data plane, it never steers it.
+  - Disabled is really off: handles record nothing, snapshots carry no
+    quantile keys, and flipping enable/disable reuses live handles.
+  - The exports hold their published shape: ``metrics_snapshot()``
+    validates against scripts/obs_schema.json (workers=4 included, with
+    per-channel p99s readable), scheduling_report() carries the
+    ``"__switch__"`` section, and ``prometheus_text()`` emits cumulative
+    bucket series.
+"""
+import json
+import threading
+
+import pytest
+
+import repro.api as inc
+from repro import obs
+from repro.core.channel import DRAIN_TRIGGERS, ChannelStats
+from repro.obs import schema as obs_schema
+from repro.obs import trace as trace_mod
+from repro.obs.metrics import (COUNT_BUCKETS, Counter, Histogram,
+                               MetricsRegistry, metric_key)
+from repro.obs.trace import TraceRecorder, validate_chrome_trace
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test starts and ends with obs off and empty — the module
+    globals (registry, tracer, hook bools) are process-wide."""
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+# -- histogram arithmetic ----------------------------------------------------
+
+def test_histogram_bucket_boundaries():
+    h = Histogram("h", buckets=(10.0, 20.0, 40.0))
+    # le semantics: a sample equal to a bound lands in that bound's bucket
+    for v in (5.0, 10.0, 10.5, 20.0, 39.9, 40.0, 41.0):
+        h.observe(v)
+    assert h.bounds == (10.0, 20.0, 40.0, float("inf"))
+    assert h.counts == [2, 2, 2, 1]
+    assert h.count == 7
+    assert h.sum == pytest.approx(5 + 10 + 10.5 + 20 + 39.9 + 40 + 41)
+    assert h.min == 5.0 and h.max == 41.0
+
+
+def test_histogram_rejects_bad_buckets():
+    with pytest.raises(ValueError):
+        Histogram("h", buckets=())
+    with pytest.raises(ValueError):
+        Histogram("h", buckets=(1.0, 1.0, 2.0))
+    with pytest.raises(ValueError):
+        Histogram("h", buckets=(2.0, 1.0))
+
+
+def test_observe_many_equals_observe_loop():
+    vals = [0.5, 1.0, 3.14, 17.0, 1e4, 2e6, 7.0, 7.0, 0.0]
+    a = Histogram("a")
+    b = Histogram("b")
+    for v in vals:
+        a.observe(v)
+    b.observe_many(vals)
+    assert a.counts == b.counts
+    assert a.count == b.count
+    assert a.sum == pytest.approx(b.sum)
+    assert a.min == b.min and a.max == b.max
+    b.observe_many([])                      # empty batch is a no-op
+    assert b.count == len(vals)
+
+
+def test_histogram_merge_exact_and_bound_checked():
+    a = Histogram("a", buckets=(1.0, 10.0, 100.0))
+    b = Histogram("b", buckets=(1.0, 10.0, 100.0))
+    a.observe_many([0.5, 5.0, 50.0])
+    b.observe_many([7.0, 500.0])
+    a.merge(b)
+    assert a.count == 5
+    assert a.counts == [1, 2, 1, 1]
+    assert a.sum == pytest.approx(562.5)
+    assert a.min == 0.5 and a.max == 500.0
+    with pytest.raises(ValueError):
+        a.merge(Histogram("c", buckets=(2.0, 20.0)))
+
+
+def test_quantiles_clamp_to_observed_range():
+    h = Histogram("h", buckets=(100.0, 200.0))
+    h.observe(150.0)
+    # single sample: every quantile is that sample (interpolation clamps)
+    assert h.quantile(0.0) == 150.0
+    assert h.quantile(0.5) == 150.0
+    assert h.quantile(0.99) == 150.0
+    # +inf bucket: the observed max is the only finite estimate
+    h2 = Histogram("h2", buckets=(1.0,))
+    h2.observe_many([5.0, 7.0, 9.0])
+    assert h2.quantile(0.99) == 9.0
+    assert Histogram("h3").quantile(0.5) == 0.0      # empty -> 0
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_quantile_interpolates_monotonically():
+    h = Histogram("h", buckets=tuple(float(b) for b in COUNT_BUCKETS))
+    h.observe_many(list(range(1, 1001)))
+    qs = [h.quantile(q) for q in (0.1, 0.25, 0.5, 0.75, 0.9, 0.99)]
+    assert qs == sorted(qs)
+    assert 400 <= h.quantile(0.5) <= 600      # coarse but centered
+    s = h.summary()
+    assert set(s) == {"count", "sum", "min", "max", "mean",
+                      "p50", "p90", "p99"}
+    assert s["count"] == 1000 and s["mean"] == pytest.approx(500.5)
+
+
+def test_concurrent_writers_lose_nothing():
+    reg = MetricsRegistry(enabled=True)
+    h = reg.histogram("lat_us")
+    c = reg.counter("total")
+    n_threads, per = 4, 2000
+
+    def work(seed):
+        for i in range(per):
+            h.observe(float((seed * per + i) % 997))
+            c.inc()
+
+    ts = [threading.Thread(target=work, args=(k,)) for k in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert h.count == n_threads * per
+    assert sum(h.counts) == n_threads * per
+    assert c.value == n_threads * per
+
+
+# -- registry behavior -------------------------------------------------------
+
+def test_registry_dedupes_and_type_checks():
+    reg = MetricsRegistry(enabled=True)
+    assert reg.counter("x", app="a") is reg.counter("x", app="a")
+    assert reg.counter("x", app="a") is not reg.counter("x", app="b")
+    with pytest.raises(TypeError):
+        reg.gauge("x", app="a")
+    assert metric_key("x", {"b": 1, "a": 2}) == 'x{a="2",b="1"}'
+
+
+def test_disabled_registry_records_nothing():
+    reg = MetricsRegistry(enabled=False)
+    c, g, h = reg.counter("c"), reg.gauge("g"), reg.histogram("h")
+    c.inc()
+    g.set(3.0)
+    h.observe(1.0)
+    h.observe_many([1.0, 2.0])
+    assert c.value == 0 and g.value == 0.0 and h.count == 0
+    # the same handles start recording after the flip — no re-lookup
+    reg.enabled = True
+    c.inc(5)
+    g.set(2.5)
+    h.observe(1.0)
+    assert c.value == 5 and g.value == 2.5 and h.count == 1
+
+
+def test_snapshot_and_collectors():
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("c", app="a").inc(3)
+    reg.gauge("g").set(1.5)
+    reg.histogram("h").observe(10.0)
+    reg.register_collector("agents", lambda: {"hits": 7})
+    reg.register_collector("broken", lambda: 1 / 0)
+    snap = reg.snapshot()
+    assert snap["schema"] == "repro.obs/v1" and snap["enabled"]
+    assert snap["counters"]['c{app="a"}'] == 3
+    assert snap["gauges"]["g"] == 1.5
+    assert snap["histograms"]["h"]["count"] == 1
+    assert snap["collected"]["agents"] == {"hits": 7}
+    assert "error" in snap["collected"]["broken"]   # must not kill export
+    reg.reset()
+    assert reg.snapshot()["counters"] == {}
+
+
+def test_prometheus_text_cumulative_buckets():
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("reqs", app="a").inc(2)
+    h = reg.histogram("lat", buckets=(10.0, 100.0))
+    h.observe_many([5.0, 50.0, 500.0])
+    text = reg.prometheus_text()
+    assert "# TYPE lat histogram" in text
+    assert 'lat_bucket{le="10.0"} 1' in text
+    assert 'lat_bucket{le="100.0"} 2' in text
+    assert 'lat_bucket{le="+Inf"} 3' in text
+    assert "lat_count 3" in text
+    assert 'reqs{app="a"} 2' in text
+
+
+# -- trace ring --------------------------------------------------------------
+
+def test_trace_ring_wraparound_counts_drops():
+    rec = TraceRecorder(capacity=8)
+    for i in range(12):
+        rec.add_complete(f"e{i}", "t", float(i), 1.0, tid=1)
+    assert len(rec) == 8
+    assert rec.dropped == 4
+    doc = rec.chrome_trace()
+    validate_chrome_trace(doc)
+    names = [e["name"] for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert names == [f"e{i}" for i in range(4, 12)]   # oldest evicted
+    assert doc["otherData"]["dropped_events"] == 4
+    rec.clear()
+    assert len(rec) == 0 and rec.dropped == 0
+
+
+def test_trace_sampling_stride_is_deterministic():
+    obs.enable(trace=True, trace_stride=3)
+    sampled = 0
+    for _ in range(9):
+        ctx = trace_mod.maybe_start("batch", "APP", n=1)
+        if ctx is not None:
+            sampled += 1
+            trace_mod.phase("inner", trace_mod.now_us())
+            trace_mod.end(ctx)
+    # whatever phase the global counter is in, 9 consecutive batches at
+    # stride 3 sample exactly 3
+    assert sampled == 3
+    doc = obs.chrome_trace()
+    validate_chrome_trace(doc)
+    by_name = {}
+    for ev in doc["traceEvents"]:
+        by_name[ev["name"]] = by_name.get(ev["name"], 0) + 1
+    assert by_name["batch"] == 3 and by_name["inner"] == 3
+
+
+def test_spans_are_noops_when_off():
+    with obs.trace_span("user"):                 # off: NULL_SPAN
+        pass
+    with trace_mod.span("phase"):                # no active ctx either
+        pass
+    assert len(obs.tracer()) == 0
+    obs.enable(trace=True)
+    with obs.trace_span("user", step=1):
+        pass
+    assert any(e["name"] == "user"
+               for e in obs.chrome_trace()["traceEvents"])
+
+
+def test_validate_chrome_trace_rejects_garbage():
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"events": []})
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"traceEvents": [{"ph": "Z", "pid": 1,
+                                                "tid": 1}]})
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"traceEvents": [
+            {"ph": "X", "pid": 1, "tid": 1, "name": "a", "ts": 0,
+             "dur": -1}]})
+
+
+# -- strict trigger accounting (satellite b) ---------------------------------
+
+def test_note_trigger_rejects_unknown_trigger():
+    st = ChannelStats()
+    for t in DRAIN_TRIGGERS:
+        st.note_trigger(t)
+    assert sum(st.drain_triggers.values()) == len(DRAIN_TRIGGERS)
+    with pytest.raises(ValueError, match="unknown drain trigger"):
+        st.note_trigger("typo")
+
+
+# -- data-plane integration --------------------------------------------------
+
+@inc.service(app="OBS-T", drain=inc.DrainPolicy(max_batch=8, max_delay=0.05,
+                                                eager_window=False))
+class ObsProbe:
+    @inc.rpc(request_msg="R")
+    def Push(self, kvs: inc.Agg[inc.STRINTMap],
+             payload: inc.Plain) -> {"payload": inc.Plain}: ...
+
+    @inc.rpc(reply_msg="Q")
+    def Query(self, kvs: inc.ReadMostly[inc.STRINTMap]): ...
+
+
+def _workload(n_calls=48):
+    """Deterministic probe stream; returns every observable output as one
+    JSON-serializable object (replies + aggregated map state)."""
+    rt = inc.NetRPC()
+    rt.server.register("Push", lambda req: {"payload": "ack"})
+    stub = rt.make_stub(ObsProbe, n_slots=256)
+    truth = {}
+    replies = []
+    for i in range(n_calls):
+        kvs = {f"k-{(i * 7 + j) % 13}": j + 1 for j in range(4)}
+        for k, v in kvs.items():
+            truth[k] = truth.get(k, 0) + v
+        replies.append(stub.Push(kvs=kvs, payload=f"p{i}").result())
+    query = stub.Query(kvs={k: 0 for k in truth}).result()
+    return {"replies": replies, "query": query["kvs"], "truth": truth}
+
+
+def test_identity_obs_off_vs_on():
+    """The whole point of the guard structure: enabling metrics+tracing
+    must not change a single byte of what the data plane computes."""
+    base = json.dumps(_workload(), sort_keys=True)
+    obs.enable(trace=True, trace_stride=1)
+    traced = json.dumps(_workload(), sort_keys=True)
+    obs.disable()
+    again = json.dumps(_workload(), sort_keys=True)
+    assert traced == base
+    assert again == base
+    d = json.loads(base)
+    assert d["query"] == d["truth"]
+
+
+def test_disabled_runtime_snapshot_has_no_quantiles():
+    with inc.IncRuntime() as rt:
+        rt.server.register("Push", lambda req: {"payload": "ack"})
+        stub = rt.make_stub(ObsProbe, n_slots=256)
+        futs = [stub.Push(kvs={"a": 1}, payload="x") for _ in range(16)]
+        rt.drain()
+        for f in futs:
+            f.result()
+        snap = rt.metrics_snapshot()
+    assert snap["enabled"] is False
+    ch = snap["channels"]["OBS-T"]
+    assert "latency_p50_us" not in ch and "drain_wait_p99_us" not in ch
+    assert snap["metrics"]["counters"] == {}    # nothing recorded
+
+
+def test_workers4_snapshot_validates_and_reports_quantiles():
+    obs.enable(trace=True, trace_stride=2)
+    with inc.IncRuntime(workers=4) as rt:
+        rt.server.register("Push", lambda req: {"payload": "ack"})
+        stub = rt.make_stub(ObsProbe, n_slots=256)
+        futs = [stub.Push(kvs={f"k-{i % 11}": 1, f"k-{i % 7}": 2},
+                          payload="x") for i in range(64)]
+        rt.drain()
+        for f in futs:
+            f.result()
+        report = rt.scheduling_report()
+        snap = rt.metrics_snapshot()
+    # satellite a: the switch section rides the scheduling report
+    assert "__switch__" in report
+    assert report["__switch__"]["apps"]["OBS-T"]["cache_hit_ratio"] >= 0.0
+    # the checked-in schema is the contract CI holds the export to
+    obs_schema.validate(snap,
+                        obs_schema.load(obs_schema.repo_schema_path()))
+    ch = snap["channels"]["OBS-T"]
+    for key in ("latency_p50_us", "latency_p99_us",
+                "drain_wait_p50_us", "drain_wait_p99_us"):
+        assert key in ch, key
+    assert ch["latency_p99_us"] >= ch["latency_p50_us"]
+    assert ch["acks"] >= 1
+    assert snap["switch"]["total_slots"] > 0
+    assert snap["switch"]["segments"]
+    hists = snap["metrics"]["histograms"]
+    assert any(k.startswith("inc_pipeline_pass_us") for k in hists)
+    validate_chrome_trace(obs.chrome_trace())
+
+
+def test_per_runtime_histograms_are_isolated():
+    """Two runtimes must not share latency distributions: the per-channel
+    histograms live on the scheduler queue, not in the global registry."""
+    obs.enable()
+
+    def one_runtime():
+        with inc.IncRuntime() as rt:
+            rt.server.register("Push", lambda req: {"payload": "ack"})
+            stub = rt.make_stub(ObsProbe, n_slots=256)
+            futs = [stub.Push(kvs={"a": 1}, payload="x") for _ in range(8)]
+            rt.drain()
+            for f in futs:
+                f.result()
+            return rt.metrics_snapshot()["channels"]["OBS-T"]
+
+    a = one_runtime()
+    b = one_runtime()
+    # same workload, fresh histograms: counts reflect ONE runtime's calls
+    assert a["drained_calls"] == b["drained_calls"] == 8
