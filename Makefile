@@ -1,12 +1,19 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast examples bench-batch bench-async bench-wire \
-	bench-shard bench-device bench-obs trace-shard
+.PHONY: test test-fast lint-plane examples bench-batch bench-async \
+	bench-wire bench-shard bench-device bench-obs trace-shard
 
 # full tier-1 suite (includes the slow multidevice subprocess tests)
 test:
 	python -m pytest -q
+
+# plane-invariant static analyzer (planelint): lock discipline, obs
+# purity, env/schema hygiene over src/repro — see docs/ANALYSIS.md.
+# Fails on any finding not pragma'd or baselined, and on stale baseline
+# entries.
+lint-plane:
+	python -m repro.analysis src/repro
 
 # fast lane: non-slow suite + delta vs the seed baseline
 test-fast:

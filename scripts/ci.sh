@@ -35,6 +35,32 @@ if [ "$status" -ne 0 ]; then
     exit "$status"
 fi
 
+# planelint lane: the plane-invariant static analyzer (docs/ANALYSIS.md)
+# must be clean — findings are only tolerated behind an inline pragma or
+# a justified scripts/planelint_baseline.json entry, and stale baseline
+# entries fail too (exit 2). The same block asserts the zero-dependency
+# guarantee: importing and running repro.analysis pulls nothing outside
+# the stdlib, so the lint gate runs on a stock Python (no ruff, no
+# site-packages) and cannot rot with the environment.
+if ! timeout 120 python - <<'EOF'
+import sys
+before = set(sys.modules)
+from repro.analysis.cli import main
+import repro.analysis
+repro.analysis.analyze_source("import os\n")
+stdlib = set(sys.stdlib_module_names)
+bad = sorted(m for m in set(sys.modules) - before
+             if m.split(".")[0] not in stdlib
+             and not (m == "repro" or m.startswith("repro.analysis")))
+assert not bad, f"repro.analysis pulled non-stdlib modules: {bad}"
+print("planelint zero-dep: OK")
+sys.exit(main(["src/repro"]))
+EOF
+then
+    echo "FAST LANE: FAIL (planelint)"
+    exit 1
+fi
+
 # the smokes below must (re)write their BENCH_*.json exports — record the
 # lane start so the trajectory check can reject stale files
 bench_stamp=$(date +%s)

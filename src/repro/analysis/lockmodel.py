@@ -1,0 +1,77 @@
+"""Lexical lock model for the sharded data plane.
+
+Two lock classes matter (docs/MIGRATION.md "Concurrency model"):
+
+- the **plane** lock — ``Channel.plane``, the channel-scoped RLock that
+  serializes one channel's pipeline passes; recognized as any
+  ``<...>.plane`` expression;
+- **stripe** locks — ``Segment.lock``, agent ``self.lock``,
+  ``SwitchMemory._alloc_lock``: any Name/Attribute whose final component
+  contains ``lock``.
+
+The legal order is plane → stripe (a pipeline pass updates segments);
+stripe → plane is a deadlock with the concurrent runtime. The model is
+*lexical*: a lock is "held" at a node when the node sits inside a
+``with <lock>:`` body, or — for the plane's explicit
+``acquire(timeout=...)`` / try/finally ``release()`` idiom of
+``core/rpc.py`` — anywhere after a ``.plane.acquire(...)`` call in the
+same function (conservative: the repo releases in a ``finally`` at
+function end, so the over-approximation is exact in practice).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.visitor import ModuleInfo, attr_chain
+
+PLANE = "plane"
+STRIPE = "stripe"
+
+
+def lock_kind(expr) -> str | None:
+    chain = attr_chain(expr)
+    if not chain:
+        return None
+    last = chain[-1]
+    if last == "plane":
+        return PLANE
+    if "lock" in last.lower():
+        return STRIPE
+    return None
+
+
+def is_plane_acquire(call: ast.Call) -> bool:
+    chain = attr_chain(call.func)
+    return bool(chain and len(chain) >= 2
+                and chain[-2:] == ["plane", "acquire"])
+
+
+def held_kinds(mod: ModuleInfo, node) -> set:
+    """Lock kinds held lexically at ``node`` via enclosing with-blocks."""
+    held = set()
+    for anc, child in mod.ancestors(node):
+        if isinstance(anc, (ast.With, ast.AsyncWith)) and child in anc.body:
+            for item in anc.items:
+                kind = lock_kind(item.context_expr)
+                if kind:
+                    held.add(kind)
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            break     # a nested def is a new dynamic extent
+    return held
+
+
+def plane_held(mod: ModuleInfo, node) -> bool:
+    """Plane lock held at ``node``: lexical with-block, or the node sits
+    after an explicit ``.plane.acquire(...)`` in the same function."""
+    if PLANE in held_kinds(mod, node):
+        return True
+    fn = mod.enclosing_function(node)
+    if fn is None:
+        return False
+    line = getattr(node, "lineno", 0)
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Call) and is_plane_acquire(sub) \
+                and sub is not node and sub.lineno < line \
+                and mod.enclosing_function(sub) is fn:
+            return True
+    return False

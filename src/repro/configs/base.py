@@ -14,8 +14,7 @@ is `[("local",)*5 + ("global",)] * 10 + [("local",)*2]`:
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 BLOCK_TYPES = (
     "global",     # causal full attention + FFN

@@ -25,7 +25,6 @@ optimizer or the dequant scale.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from functools import reduce
 

@@ -335,7 +335,10 @@ class _MapOpBuffer:
 # How long a pipeline pass may wait for a channel's plane lock before
 # concluding the wait is a cross-channel handler cycle (pass on A nested
 # into B while a pass on B nested into A) and raising instead of hanging.
-PLANE_LOCK_TIMEOUT = 60.0
+# REPRO_PLANE_LOCK_TIMEOUT (seconds) overrides the default; read once at
+# import (E1) — tests that need a different value rebind the module
+# attribute rather than the environment.
+PLANE_LOCK_TIMEOUT = float(os.environ.get("REPRO_PLANE_LOCK_TIMEOUT", "60"))
 
 
 def _run_pipeline(channel: Channel, host_server: Server,

@@ -23,7 +23,7 @@ run AIMD on a window cw <= w_max.
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable
 
 W_MAX_DEFAULT = 256

@@ -18,8 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.backend import resolve_interpret
-from repro.kernels.constants import (DEFAULT_BLOCK_ROWS, INT32_MAX, INT32_MIN,
-                                     LANES, SAT_MAX, SAT_MIN)
+from repro.kernels.constants import (DEFAULT_BLOCK_ROWS, INT32_MAX,
+                                     INT32_MIN, LANES)
 
 
 def _sat_add_block(a, b):

@@ -20,7 +20,7 @@ import numpy as np
 from repro.kernels import ref
 from repro.kernels.backend import resolve_interpret
 from repro.kernels.constants import (DEFAULT_BLOCK_ROWS, INT32_MAX,
-                                     INT32_MIN, LANES, SAT_MAX, SAT_MIN)
+                                     INT32_MIN, LANES, SAT_MAX)
 from repro.kernels.dequantize import dequantize_pallas
 from repro.kernels.flash_attn import (flash_attention_chunked_ref,
                                       flash_attention_pallas)

@@ -32,7 +32,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, inc_mode: str,
         os.environ["REPRO_FLASH_ATTN"] = "1"
     if qgather:
         os.environ["REPRO_QUANTIZED_GATHER"] = "1"
-    import jax
     from dataclasses import replace as _replace
 
     from repro.configs.base import get_arch, SHAPES, shape_applicable

@@ -25,8 +25,6 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint.store import CheckpointStore
-from repro.configs.base import get_arch
 from repro.core.agreement import elastic_mean, quorum_commit, quorum_count
 from repro import compat
 from repro.launch.train import train_loop

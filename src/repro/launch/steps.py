@@ -24,7 +24,7 @@ flash-decoding partial-softmax combine in models/attention.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable
 
