@@ -1,8 +1,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast lint-plane examples bench-batch bench-async \
-	bench-wire bench-shard bench-device bench-obs trace-shard
+.PHONY: test test-fast lint-plane examples bench-batch bench-accum \
+	bench-async bench-wire bench-shard bench-device bench-obs trace-shard
 
 # full tier-1 suite (includes the slow multidevice subprocess tests)
 test:
@@ -19,16 +19,22 @@ lint-plane:
 test-fast:
 	bash scripts/ci.sh
 
-# the four typed-schema INC example apps (each self-asserts its results)
+# the typed-schema INC example apps (each self-asserts its results)
 examples:
 	python -m examples.quickstart
 	python -m examples.mapreduce
 	python -m examples.monitoring
 	python -m examples.paxos
+	python -m examples.train_telemetry
 
 # batched RPC data-plane sweep (calls/sec vs batch size)
 bench-batch:
 	python benchmarks/agg_goodput.py --batch
+
+# client-side local aggregation sweep (effective calls/sec vs local_accum,
+# gate: >=3x at local_accum=8 + element-exact host/device differential)
+bench-accum:
+	python benchmarks/agg_goodput.py --local-accum
 
 # async runtime sweep: p50/p99 latency + throughput per auto-drain trigger
 bench-async:

@@ -126,6 +126,25 @@ fi
 rm -f "$smoke_log"
 echo "obs_overhead smoke: OK"
 
+# smoke the local-aggregation sweep (tiny n; the 3x gate is asserted on
+# the committed full run, but the element-exact host/device differential
+# runs at full strength here — a fold-exactness divergence fails CI)
+smoke_log=$(mktemp)
+if ! timeout 300 python -m benchmarks.agg_goodput --local-accum --smoke > "$smoke_log" 2>&1; then
+    echo "FAST LANE: FAIL (agg_accum smoke); output:"
+    cat "$smoke_log"
+    rm -f "$smoke_log"
+    exit 1
+fi
+if grep -q "host_exact=False\|device_exact=False" "$smoke_log"; then
+    echo "FAST LANE: FAIL (agg_accum smoke: fold differential not exact); output:"
+    cat "$smoke_log"
+    rm -f "$smoke_log"
+    exit 1
+fi
+rm -f "$smoke_log"
+echo "agg_accum smoke: OK"
+
 # obs lane: the exports users consume must hold their published shapes —
 # a live traced runtime's metrics_snapshot() validates against the
 # checked-in scripts/obs_schema.json and the Chrome trace JSON validates
@@ -193,23 +212,24 @@ for f in files:
         assert key in d, f"{f}: missing {key!r}"
     assert isinstance(d["rows"], list) and d["rows"], f"{f}: empty rows"
 for name in ("async_latency", "wire_path", "multi_channel", "device_path",
-             "obs_overhead"):
+             "obs_overhead", "agg_accum"):
     f = pathlib.Path(f"benchmarks/BENCH_smoke_{name}.json")
     assert f.exists(), f"{f}: the smoked bench exported nothing"
     assert f.stat().st_mtime >= stamp, \
         f"{f}: stale — this lane's smoke did not rewrite it"
 print(f"bench trajectory: {len(files)} BENCH_*.json parse OK, "
-      f"5 smoke exports fresh")
+      f"6 smoke exports fresh")
 EOF
 then
     echo "FAST LANE: FAIL (BENCH_*.json export)"
     exit 1
 fi
 
-# examples lane: the four typed-schema INC apps are the front door — an
-# API regression here must fail CI, not users. Each example self-asserts
-# its INC results (aggregation sums, exact counters, quorum counts).
-for ex in quickstart mapreduce monitoring paxos; do
+# examples lane: the typed-schema INC apps are the front door — an API
+# regression here must fail CI, not users. Each example self-asserts its
+# INC results (aggregation sums, exact counters, quorum counts, folded
+# telemetry exactness).
+for ex in quickstart mapreduce monitoring paxos train_telemetry; do
     ex_log=$(mktemp)
     if ! timeout 120 python -m "examples.$ex" > "$ex_log" 2>&1; then
         echo "FAST LANE: FAIL (examples.$ex); output:"

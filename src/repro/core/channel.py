@@ -56,6 +56,12 @@ class ChannelStats:
     # the fast path is visible
     gpv_calls: int = 0
     gpv_elems: int = 0
+    # client-side local aggregation (Agg[...](local_accum=N)): calls folded
+    # into switch-bound updates, and the flushes that carried them.  Every
+    # flush absorbs >=1 call, so local_folds >= flushes and the two are
+    # zero together — check_consistent() audits that pairing.
+    local_folds: int = 0
+    flushes: int = 0
 
     @property
     def mean_batch(self) -> float:
@@ -100,6 +106,15 @@ class ChannelStats:
                 f"explicit_batches={self.explicit_batches} != "
                 f"batches={self.batches}) — a pipeline entry point "
                 f"double-counted or skipped its source attribution")
+        # local-aggregation pairing: folded calls are only counted when
+        # their flush executes, so a flush with zero folds (or folds with
+        # no flush) means a fold path skipped its accounting
+        if (self.local_folds < self.flushes
+                or (self.flushes == 0) != (self.local_folds == 0)):
+            raise AssertionError(
+                f"ChannelStats fold drift: local_folds={self.local_folds} "
+                f"vs flushes={self.flushes} — every fold flush must absorb "
+                f">=1 call and count both at flush time")
 
 
 class Channel:
@@ -137,6 +152,12 @@ class Channel:
         # a handler's inline follow-up call — flushes it on entry so it
         # observes the enclosing pass's buffered addTo/clear updates
         self.active_buf = None
+        # client-side local aggregation (local_accum=N): per-method fold
+        # buffers (rpc._FoldBuffer) holding calls not yet bound for the
+        # switch.  Guarded by fold_lock, which is always taken *before*
+        # plane (fold-accept never runs inside a pipeline pass).
+        self.folds: dict[str, object] = {}
+        self.fold_lock = threading.Lock()
 
     def client(self) -> ClientAgent:
         c = ClientAgent(self.server)

@@ -91,6 +91,8 @@ from repro.core.clear_policy import POLICIES
 from repro.core.inc_map import hash_key, quantize_stream, quantize_values
 from repro.core.netfilter import NetFilter
 from repro.kernels import ref
+from repro.kernels.ops import (device_fold_rounds, fold_rounds,
+                               fold_stream_host)
 from repro.obs import hooks as _obs
 from repro.obs import trace as _trace
 
@@ -249,6 +251,10 @@ class _PlannedCall:
     forwarded: bool = True
     completed: bool = False                     # pipeline finished this call
     reply: dict = field(default_factory=dict)
+    prefolded: bool = False                     # local_accum flush: items
+    #         ^ were quantized+modified+summed per round at fold time
+    #           (_FoldBuffer) — phase 1 must not recompute them
+    fold_depth: int = 0                         # calls folded into this flush
 
     @property
     def nf(self) -> NetFilter:
@@ -447,6 +453,20 @@ def _run_pipeline_locked(channel: Channel, host_server: Server,
 
     # ---- phase 1: Stream.modify, fused across the batch --------------------
     for c in calls:
+        if c.prefolded:
+            # locally folded flush (Agg[...](local_accum=N)): items were
+            # quantized, modified and summed per round at fold time —
+            # recomputing them from the representative request would drop
+            # the folded rounds. The cohort is accounted here, under the
+            # plane lock with every other stat (ChannelStats fold audit).
+            channel.stats.local_folds += c.fold_depth
+            channel.stats.flushes += 1
+            if _obs.METRICS:
+                _obs.local_fold(channel.netfilter.app_name, c.fold_depth)
+            if isinstance(c.items, TensorSegment):
+                channel.stats.gpv_calls += 1
+                channel.stats.gpv_elems += len(c.items)
+            continue
         c.items = (_stream_items(c.request, c.nf.add_to)
                    if c.nf.add_to != "nop" else {})
         if c.nf.add_to == "nop" and c.nf.get != "nop":
@@ -467,7 +487,7 @@ def _run_pipeline_locked(channel: Channel, host_server: Server,
             channel.stats.gpv_elems += len(seg)
     groups: dict[tuple[str, int], list[int]] = {}
     for i, c in enumerate(calls):
-        if c.items and c.nf.modify.op != "nop":
+        if c.items and c.nf.modify.op != "nop" and not c.prefolded:
             groups.setdefault((c.nf.modify.op, c.nf.modify.para), []).append(i)
     for (op, para), ixs in groups.items():
         scaled = []
@@ -691,6 +711,10 @@ class Stub:
         # and their array replies come back as jax arrays. Set on bind by
         # the schema layer, like reply_arrays.
         self.device_methods: frozenset = frozenset()
+        # methods with Agg[...](local_accum=N>1): the client folds N
+        # successive async addTo calls into one switch-bound update
+        # (core/schema.py fills this on bind; legacy Services never fold)
+        self.accum_methods: dict[str, int] = {}
         self._array_ok = {m: _array_get_field(md)
                           for m, md in service.methods.items()}
 
@@ -889,6 +913,175 @@ def resolve_futures(pairs: list, exc: BaseException | None) -> None:
             fut.set_exception(err)
 
 
+class _FoldBuffer:
+    """Client-side local aggregation for ONE channel method
+    (``Agg[...](local_accum=N)``): folds successive async addTo calls into
+    a single switch-bound update before the pipeline touches the plane.
+
+    Each accepted call is processed exactly as phase 1 would have —
+    quantize to the fixed-point integer domain (``rint(x*scale)``), apply
+    the configured Stream.modify per round — and the rounds accumulate
+    client-side where saturation cannot occur (exact int64 on the host
+    lane, the fused fold kernel on the device lane), so the ONE saturating
+    switch addTo at flush is element-exact vs N separate calls wherever no
+    intermediate switch sum would have saturated (the same fixed-point
+    contract the device lane documents). Pre-quantization folding would
+    change rounding; that is why the fold runs post-quantize.
+
+    Three lanes, chosen by the first round and sealed on mismatch:
+
+      tensor  dense GPV segments of one shape: per-round int64 quantized
+              streams, summed in one fused ``kernels.ops.fold_rounds``.
+      dev     fp32 segments on a device channel with no modify: raw fp32
+              rounds, quantized+folded in ONE ``fused_fold_pallas`` launch.
+      dict    sparse maps: keys interned to first-occurrence indices, the
+              concatenated (index, qval) rounds merged through the
+              existing ``fold_stream_host`` machinery at flush.
+
+    The representative ``_PlannedCall`` carries ``prefolded=True`` so the
+    pipeline neither recomputes its items nor re-applies modify; the whole
+    cohort's futures resolve with the representative's reply.
+
+    Guarded by ``Channel.fold_lock`` (held by callers around ``fold``);
+    never held while taking the plane lock or the runtime work lock.
+    """
+
+    def __init__(self, stub: "Stub", method: str):
+        self.stub = stub
+        self.method = method
+        self.md = stub.service.methods[method]
+        self.agent = stub.agents[method]
+        self.futures: list = []
+        self.created: float | None = None   # first-round clock, staleness
+        self.mode: str | None = None        # "tensor" | "dev" | "dict"
+        self.shape: tuple | None = None
+        self.qrounds: list = []             # tensor lane, int64 per round
+        self.frounds: list = []             # dev lane, raw fp32 per round
+        self.key_ix: dict = {}              # dict lane: key -> intern index
+        self.keys: list = []
+        self.ix_rounds: list = []
+        self.val_rounds: list = []
+        self.request: dict | None = None    # first request: passthrough rep
+
+    @property
+    def depth(self) -> int:
+        return len(self.futures)
+
+    def _round_quantized(self, values, scale) -> np.ndarray:
+        """One round's values -> the int64 fixed-point stream phase 1
+        would have produced (quantize, then the configured modify)."""
+        nf = self.md.netfilter
+        q = quantize_values(values, scale)
+        if nf.modify.op != "nop":
+            q = np.asarray(ref.stream_modify(_int32_checked(q),
+                                             nf.modify.op, nf.modify.para),
+                           np.int64)
+        return np.asarray(q, np.int64)
+
+    def fold(self, request: dict, fut) -> bool:
+        """Fold one call in; False when the request is incompatible with
+        the open rounds (lane or shape change) — the caller seals this
+        buffer for flushing and retries on a fresh one (which accepts
+        any first round)."""
+        nf = self.md.netfilter
+        scale = 10 ** nf.precision
+        items = _stream_items(request, nf.add_to)
+        if isinstance(items, TensorSegment):
+            if self.mode is None:
+                self.mode = ("dev" if (self.method in
+                                       self.stub.device_methods
+                                       and nf.modify.op == "nop"
+                                       and items.data.dtype == np.float32)
+                             else "tensor")
+                self.shape = items.shape
+            elif self.mode == "dict" or items.shape != self.shape:
+                return False
+            if self.mode == "dev":
+                if items.data.dtype != np.float32:
+                    return False
+                self.frounds.append(items.data)
+            else:
+                self.qrounds.append(self._round_quantized(items.data, scale))
+        else:
+            if self.mode is None:
+                self.mode = "dict"
+            elif self.mode != "dict":
+                return False
+            if items:
+                q = self._round_quantized(list(items.values()), scale)
+                ix = np.empty(len(items), np.int64)
+                for j, k in enumerate(items):
+                    i = self.key_ix.get(k)
+                    if i is None:
+                        i = self.key_ix[k] = len(self.keys)
+                        self.keys.append(k)
+                    ix[j] = i
+                self.ix_rounds.append(ix)
+                self.val_rounds.append(q)
+        if self.request is None:
+            self.request = request
+        self.futures.append(fut)
+        return True
+
+    def make_call(self) -> _PlannedCall:
+        """Build the sealed buffer's representative pipeline call."""
+        nf = self.md.netfilter
+        scale = 10 ** nf.precision
+        if self.mode == "dev" and self.frounds:
+            qsum = np.asarray(device_fold_rounds(self.frounds, scale),
+                              np.int64)
+            items = TensorSegment(data=np.zeros(len(qsum), np.float32),
+                                  shape=self.shape, qvals=qsum)
+        elif self.mode == "tensor" and self.qrounds:
+            qsum = fold_rounds(self.qrounds)
+            items = TensorSegment(data=np.zeros(len(qsum), np.float32),
+                                  shape=self.shape, qvals=qsum)
+        elif self.ix_rounds:
+            uniq, _, sums = fold_stream_host(
+                np.concatenate(self.ix_rounds),
+                np.concatenate(self.val_rounds))
+            # resolve() re-quantizes the representative dict: rint((s /
+            # scale) * scale) == s exactly for |s| < 2**52 (ints pass
+            # through unscaled at scale 1), so the handoff stays exact
+            items = {self.keys[int(i)]: (int(s) if scale == 1
+                                         else int(s) / scale)
+                     for i, s in zip(uniq, sums)}
+        else:
+            items = {}
+        return _PlannedCall(
+            agent=self.agent, md=self.md, request=self.request or {},
+            array_reply=(self.stub.reply_arrays
+                         and self.stub._array_ok[self.method]),
+            device_plan=(self.method in self.stub.device_methods),
+            items=items, prefolded=True, fold_depth=self.depth)
+
+
+class _FoldCohort:
+    """Future-like fan-out for one folded flush: the representative
+    call's resolution is delivered to every folded call's future with the
+    mid-batch-failure chaining semantics — on failure the first cohort
+    future carries the exception and the rest get a chained "abandoned"
+    error, exactly like calls queued behind a failing call today."""
+
+    __slots__ = ("futures",)
+
+    def __init__(self, futures: list):
+        self.futures = futures
+
+    def set_result(self, reply: dict) -> None:
+        for f in self.futures:
+            f.set_result(reply)
+
+    def set_exception(self, exc: BaseException) -> None:
+        self.futures[0].set_exception(exc)
+        for f in self.futures[1:]:
+            err = RuntimeError(
+                "call abandoned: its batch raised before this call "
+                "completed; resubmit it")
+            err.__cause__ = exc
+            f.set_exception(err)
+
+
 class NetRPC:
     """In-process NetRPC runtime: controller + switch + agents.
 
@@ -909,6 +1102,9 @@ class NetRPC:
         self.controller = controller or Controller()
         self.server = Server()
         self._dirty: list[Channel] = []      # channels with queued calls
+        # fold-staleness clock (IncRuntime overrides with its scheduler
+        # clock, so virtual-clock tests drive fold aging too)
+        self._clock = time.monotonic
 
     def make_stub(self, service, n_slots: int = 4096):
         schema = getattr(service, "__inc_schema__", None)
@@ -962,6 +1158,7 @@ class NetRPC:
         issued earlier on the channel (via submit()) execute first so issue
         order is preserved."""
         ch = stub.channels[method]
+        self._promote_folds(ch)         # folded calls issued earlier first
         if ch.pending:
             _drain_channel(ch, self.server)
         return _run_pipeline(ch, self.server,
@@ -980,9 +1177,12 @@ class NetRPC:
         sequential mid-batch-failure semantics (resolve_futures)."""
         if not requests:
             return []
+        if stub.accum_methods.get(method, 0) > 1:
+            return self._fold_async(stub, method, requests)
         ch = stub.channels[method]
+        self._promote_folds(ch)               # preserve issue order
         if ch.pending:
-            _drain_channel(ch, self.server)   # preserve issue order
+            _drain_channel(ch, self.server)
         planned = [stub._plan(method, r) for r in requests]
         futs = [IncFuture() for _ in planned]
         exc = None
@@ -992,6 +1192,82 @@ class NetRPC:
             exc = e
         resolve_futures(list(zip(futs, planned)), exc)
         return futs
+
+    # -- client-side local aggregation (Agg[...](local_accum=N)) -------------
+
+    def _fold_async(self, stub: Stub, method: str,
+                    requests: list[dict]) -> list[IncFuture]:
+        """The fold front for ``local_accum=N`` methods: each async call
+        folds into the channel's per-method buffer instead of planning a
+        pipeline call; every N-th call seals the buffer and dispatches ONE
+        representative switch-bound update whose reply resolves the whole
+        cohort. Waiting on a partially-folded future demand-flushes it
+        (the wake hook), so no update is ever stranded."""
+        ch = stub.channels[method]
+        accum = stub.accum_methods[method]
+        wake = self._fold_waker(stub, method)
+        futs: list[IncFuture] = []
+        sealed: list[_FoldBuffer] = []
+        with ch.fold_lock:
+            for r in requests:
+                fb = ch.folds.get(method)
+                if fb is None:
+                    fb = ch.folds[method] = _FoldBuffer(stub, method)
+                    fb.created = self._clock()
+                fut = IncFuture(wake=wake)
+                if not fb.fold(r, fut):
+                    # incompatible with the open rounds (lane or shape
+                    # change): seal it and start fresh — a new buffer
+                    # accepts any first round
+                    sealed.append(ch.folds.pop(method))
+                    fb = ch.folds[method] = _FoldBuffer(stub, method)
+                    fb.created = self._clock()
+                    fb.fold(r, fut)
+                futs.append(fut)
+                if fb.depth >= accum:
+                    sealed.append(ch.folds.pop(method))
+        for fb in sealed:
+            self._dispatch_fold(ch, fb)
+        return futs
+
+    def _fold_waker(self, stub: Stub, method: str) -> Callable[[], None]:
+        """Demand hook installed on folded calls' futures: waiting on a
+        partially-folded future flushes its buffer now. (IncRuntime
+        overrides this to promote the fold into the scheduler instead.)"""
+        ch = stub.channels[method]
+
+        def wake() -> None:
+            with ch.fold_lock:
+                fb = ch.folds.pop(method, None)
+            if fb is not None:
+                self._dispatch_fold(ch, fb)
+        return wake
+
+    def _dispatch_fold(self, ch: Channel, fb: _FoldBuffer) -> None:
+        """Flush one sealed fold buffer: ONE pipeline pass for the whole
+        cohort, futures resolved together; a flush failure chains
+        "abandoned" onto the cohort exactly like mid-batch failure.
+        (IncRuntime overrides this to enqueue the representative on the
+        drain scheduler — one backlog/window slot per flush.)"""
+        planned = fb.make_call()
+        exc = None
+        try:
+            _run_pipeline(ch, self.server, [planned])
+        except BaseException as e:
+            exc = e
+        resolve_futures([(_FoldCohort(fb.futures), planned)], exc)
+
+    def _promote_folds(self, ch: Channel) -> None:
+        """Seal and dispatch every open fold buffer on the channel: the
+        issue-order barrier run before any non-folded pass touches the
+        plane, and on drain()/close(flush=True) so no folded update is
+        ever stranded."""
+        if not ch.folds:
+            return
+        with ch.fold_lock:
+            sealed = [ch.folds.pop(m) for m in list(ch.folds)]
+        for fb in sealed:
+            self._dispatch_fold(ch, fb)
 
     def submit(self, stub: Stub, method: str, request: dict) -> Ticket:
         ch = stub.channels[method]
@@ -1010,6 +1286,8 @@ class NetRPC:
         abandoned — but every OTHER dirty channel stays queued for the
         next drain().
         """
+        for ch in list(self.controller.channels.values()):
+            self._promote_folds(ch)
         n = 0
         dirty, self._dirty = self._dirty, []
         try:

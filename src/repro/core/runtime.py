@@ -72,8 +72,8 @@ from collections import deque
 from dataclasses import dataclass
 
 from repro.core.channel import Channel
-from repro.core.rpc import (IncFuture, NetRPC, Stub, _run_pipeline,
-                            resolve_futures)
+from repro.core.rpc import (IncFuture, NetRPC, Stub, _FoldCohort,
+                            _run_pipeline, resolve_futures)
 from repro.core.transport import AimdState, W_MAX_DEFAULT
 from repro.obs import hooks as _obs
 from repro.obs import metrics as _metrics
@@ -249,13 +249,16 @@ class IncRuntime(NetRPC):
             q.wake = lambda: self._demand(gaid)
         return q
 
-    def _enqueue(self, q: _ChannelQueue, planned) -> IncFuture:
+    def _enqueue(self, q: _ChannelQueue, planned, fut=None) -> IncFuture:
         """Append one planned call to a channel queue (caller holds
         _work), applying admission backpressure: a shrunk congestion
         window bounds the backlog a producer may build before it blocks.
         Workers and handlers (any thread inside a pipeline) are exempt:
         they hold locks a draining thread would need, so waiting
-        deadlocks."""
+        deadlocks.  ``fut`` lets the fold path enqueue a prefolded
+        representative with its _FoldCohort attached: the cohort takes
+        ONE backlog slot and one AIMD window slot, however many client
+        calls it folded."""
         ch = q.channel
         if (len(q.entries) >= q.backlog_limit
                 and not self._is_worker()
@@ -266,7 +269,8 @@ class IncRuntime(NetRPC):
                 self._work.wait()
             if self._closed:
                 raise RuntimeError("runtime is closed")
-        fut = IncFuture(wake=q.wake)
+        if fut is None:
+            fut = IncFuture(wake=q.wake)
         q.entries.append((fut, planned, self._clock()))
         n = len(q.entries)
         ch.stats.note_queue_depth(n)
@@ -279,7 +283,11 @@ class IncRuntime(NetRPC):
         return fut
 
     def call_async(self, stub: Stub, method: str, request: dict) -> IncFuture:
+        if stub.accum_methods.get(method, 0) > 1:
+            return self._fold_async(stub, method, [request])[0]
         ch = stub.channels[method]
+        if ch.folds:
+            self._promote_folds(ch)     # issue order across methods
         planned = stub._plan(method, request)
         with self._work:
             q = self._queue_for(ch)
@@ -294,7 +302,13 @@ class IncRuntime(NetRPC):
         Admission backpressure applies per call: once the backlog limit
         is hit, the submitter blocks mid-list until a worker drains
         room, so a huge batch cannot bypass the congestion coupling."""
+        if not requests:
+            return []
+        if stub.accum_methods.get(method, 0) > 1:
+            return self._fold_async(stub, method, requests)
         ch = stub.channels[method]
+        if ch.folds:
+            self._promote_folds(ch)     # issue order across methods
         planned = [stub._plan(method, r) for r in requests]
         if not planned:
             return []
@@ -307,6 +321,83 @@ class IncRuntime(NetRPC):
         IncFuture resolves when a trigger drains the channel — no explicit
         drain() needed (result() blocks until then)."""
         return self.call_async(stub, method, request)
+
+    # -- local aggregation on the scheduler ----------------------------------
+
+    def _fold_async(self, stub: Stub, method: str,
+                    requests: list[dict]) -> list[IncFuture]:
+        """Folding front on the scheduler: calls fold exactly as on base
+        NetRPC, but a buffer left partially full registers the channel's
+        queue and pokes the workers, so the time trigger (max_delay
+        staleness, _promote_due_folds) flushes it — a partial fold never
+        waits for its N-th call."""
+        futs = super()._fold_async(stub, method, requests)
+        ch = stub.channels[method]
+        if ch.folds:
+            with self._work:
+                self._queue_for(ch)
+                self._work.notify_all()
+        return futs
+
+    def _fold_waker(self, stub: Stub, method: str):
+        """result() on a folded call's future: flush its buffer through
+        the scheduler now (promote + demand), instead of dispatching
+        inline like base NetRPC."""
+        ch = stub.channels[method]
+
+        def wake() -> None:
+            if self._is_worker() or self._in_pipeline():
+                raise RuntimeError(
+                    "IncFuture.result() inside a server handler would "
+                    "deadlock the data plane; handlers must not wait on "
+                    "futures")
+            self._promote_folds(ch)
+            self._demand(ch.gaid)
+        return wake
+
+    def _dispatch_fold(self, ch: Channel, fb) -> None:
+        """Sealed fold buffers become ONE representative entry on the
+        channel's drain queue: one backlog slot, one AIMD window slot,
+        one pipeline call — the folded cohort's futures ride along as a
+        _FoldCohort and resolve together when the representative drains.
+        A nested dispatch (handler thread inside a pipeline pass) runs
+        inline like base NetRPC — the channel plane is re-entrant and
+        the worker serving it must not wait on itself."""
+        if self._in_pipeline():
+            return super()._dispatch_fold(ch, fb)
+        planned = fb.make_call()
+        cohort = _FoldCohort(fb.futures)
+        try:
+            with self._work:
+                q = self._queue_for(ch)
+                self._enqueue(q, planned, fut=cohort)
+        except BaseException as e:
+            # a closed runtime (or an admission wait cut short by close)
+            # must still resolve the cohort — the fold buffer is already
+            # popped, so nothing else will
+            cohort.set_exception(e)
+
+    def _promote_due_folds(self) -> None:
+        """Worker-side staleness sweep: seal and enqueue any fold buffer
+        older than its channel's max_delay — the fold analogue of the
+        time trigger, so a partial fold's latency is bounded exactly
+        like a queued call's."""
+        with self._work:
+            queues = list(self._queues.values())
+        now = self._clock()
+        for q in queues:
+            ch = q.channel
+            if not ch.folds:
+                continue
+            ripe = []
+            with ch.fold_lock:
+                for m in list(ch.folds):
+                    fb = ch.folds[m]
+                    if (fb.created is not None
+                            and now - fb.created >= q.policy.max_delay):
+                        ripe.append(ch.folds.pop(m))
+            for fb in ripe:
+                self._dispatch_fold(ch, fb)
 
     # -- synchronous fronts (ordering-preserving) ----------------------------
 
@@ -323,6 +414,10 @@ class IncRuntime(NetRPC):
                 lambda: super(IncRuntime, self).run_direct(stub, method,
                                                            requests))
         ch = stub.channels[method]
+        if ch.folds:
+            # folded calls issued earlier join the queue first and run
+            # in the "inline" backlog pass below (issue order)
+            self._promote_folds(ch)
         me = threading.current_thread()
         with self._work:
             q = self._queues.get(ch.gaid)
@@ -369,6 +464,8 @@ class IncRuntime(NetRPC):
             raise RuntimeError(
                 "drain() inside a server handler would deadlock the drain "
                 "worker; handlers may only call_async follow-up work")
+        for ch in list(self.controller.channels.values()):
+            self._promote_folds(ch)
         n = 0
         first_exc = None
         with self._work:
@@ -424,6 +521,17 @@ class IncRuntime(NetRPC):
                 q.entries.clear()
             self._work.notify_all()
         for fut, _, _ in leftovers:
+            fut.set_exception(RuntimeError("runtime closed before drain"))
+        # folded-but-never-flushed calls (flush=False, or folds accepted
+        # after the drain): their buffers die with the runtime, so their
+        # futures get the same terminal error as queued leftovers
+        stranded = []
+        for ch in list(self.controller.channels.values()):
+            with ch.fold_lock:
+                for fb in ch.folds.values():
+                    stranded.extend(fb.futures)
+                ch.folds.clear()
+        for fut in stranded:
             fut.set_exception(RuntimeError("runtime closed before drain"))
         threads, self._threads = self._threads, []
         for t in threads:
@@ -511,6 +619,14 @@ class IncRuntime(NetRPC):
             "max_drain_wait_us": round(wait_max * 1e6, 1),
             "acks": q.aimd.acks,
             "ecn_marks": q.aimd.ecn_marks,
+            # local aggregation (Agg[...](local_accum=N)): effective calls
+            # per wire call — every flush carried (1 + its folds) client
+            # calls as ONE pipeline call, so reduction >= 1.0 always
+            "local_folds": st.local_folds,
+            "flushes": st.flushes,
+            "traffic_reduction": round(
+                (st.calls - st.flushes + st.local_folds) / st.calls, 3)
+            if st.calls else 1.0,
         }
         # obs histograms (populated only while metrics are enabled): the
         # per-channel latency story the mean/max pair above cannot tell
@@ -675,6 +791,19 @@ class IncRuntime(NetRPC):
                     / q.policy.service_rate
                 cand = max(cand, decay)
             best = cand if best is None else min(best, cand)
+        # partial fold buffers age toward their staleness flush on the
+        # same max_delay clock (lock order _work -> fold_lock; no fold
+        # path takes _work while holding fold_lock)
+        for q in self._queues.values():
+            ch = q.channel
+            if not ch.folds:
+                continue
+            with ch.fold_lock:
+                for fb in ch.folds.values():
+                    if fb.created is None:
+                        continue
+                    cand = fb.created + q.policy.max_delay - now
+                    best = cand if best is None else min(best, cand)
         if best is None:
             return None
         return max(best, 1e-4)
@@ -683,15 +812,19 @@ class IncRuntime(NetRPC):
         self._tls.worker = True
         stats = self._worker_stats[wid]
         while True:
+            # the fold staleness sweep runs outside _work (its dispatches
+            # re-enter _work to enqueue representatives); every wakeup
+            # re-checks, so a ripe partial fold becomes a queue entry and
+            # the ordinary triggers below drain it
+            self._promote_due_folds()
             with self._work:
-                due = None
-                while due is None:
-                    if self._closed:
-                        return
-                    now = self._clock()
-                    due = self._pick(now)
-                    if due is None:
-                        self._work.wait(self._next_wake(now))
+                if self._closed:
+                    return
+                now = self._clock()
+                due = self._pick(now)
+                if due is None:
+                    self._work.wait(self._next_wake(now))
+                    continue
                 q, trigger, take = due
                 batch = [q.entries.popleft() for _ in range(take)]
                 q.busy_owner = threading.current_thread()

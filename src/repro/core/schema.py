@@ -139,8 +139,10 @@ class _FieldSpec:
     clear: str | None = None
     modify: tuple | None = None
     device: bool | None = None
+    local_accum: int | None = None
 
-    _OPTIONS = {"agg": ("precision", "clear", "modify", "device"),
+    _OPTIONS = {"agg": ("precision", "clear", "modify", "device",
+                        "local_accum"),
                 "read": ("precision", "clear", "device"),
                 "get": ("precision", "clear", "device")}
     _NAMES = {"agg": "Agg", "read": "ReadMostly", "get": "Get"}
@@ -172,6 +174,14 @@ class _FieldSpec:
                               f"{CLEAR_POLICIES}, got {kw['clear']!r}")
         if "modify" in kw:
             kw["modify"] = _norm_modify(kw["modify"], ctx)
+        if "local_accum" in kw:
+            n = kw["local_accum"]
+            if isinstance(n, bool) or not isinstance(n, int) or n < 1:
+                raise SchemaError(f"{ctx}: local_accum must be an int >= 1 "
+                                  f"(the number of addTo rounds folded "
+                                  f"client-side per switch update), got "
+                                  f"{n!r}")
+            kw["local_accum"] = n
         return replace(self, **kw)
 
 
@@ -294,6 +304,7 @@ class RpcSchema:
     netfilter: NetFilter
     drain: Any = None
     device: bool = False         # device-resident register partition
+    local_accum: int = 1         # addTo rounds folded client-side per flush
 
 
 @dataclass
@@ -320,6 +331,11 @@ class ServiceSchema:
         # (fp32 streams quantize on device; array replies are jax arrays)
         stub.device_methods = frozenset(
             m for m, rs in self.rpcs.items() if rs.device)
+        # local_accum>1 RPCs fold client-side before the pipeline; the
+        # stub-level map is what NetRPC/IncRuntime consult per call
+        stub.accum_methods = {m: rs.local_accum
+                              for m, rs in self.rpcs.items()
+                              if rs.local_accum > 1}
         return TypedStub(self, stub)
 
 
@@ -488,6 +504,26 @@ def _compile_rpc(cls_name: str, fname: str, fn, opts: _RpcOptions,
     if clear != "nop" and agg is None and read is None and get is None:
         raise SchemaError(f"{ctx}: clear={clear!r} without an Agg/"
                           f"ReadMostly/Get field has nothing to clear")
+    # local_accum folds N addTo rounds into one switch update, so it only
+    # makes sense on the Agg stream (the _OPTIONS table already keeps it
+    # off Get/ReadMostly annotations) and only where per-round switch
+    # state is unobservable: a CntFwd vote counts *switch* arrivals (one
+    # folded flush = one vote, not N), and clear="lazy" snapshots the
+    # running switch register between rounds — both would change meaning.
+    local_accum = int(_merge_option(
+        ctx, "local_accum", *[s.local_accum for s in specs]) or 1)
+    if local_accum > 1:
+        if opts.cnt_fwd is not None:
+            raise SchemaError(
+                f"{ctx}: local_accum={local_accum} with cnt_fwd — CntFwd "
+                f"counts switch arrivals, so folding N calls into one "
+                f"update would miscount votes; drop one of the two")
+        if clear == "lazy":
+            raise SchemaError(
+                f"{ctx}: local_accum={local_accum} with clear='lazy' — "
+                f"lazy clear makes per-round switch state observable "
+                f"(host snapshot deltas), which folding would skew; use "
+                f"clear='copy' or 'shadow'")
 
     nf_dict = {
         "AppName": app,
@@ -510,7 +546,8 @@ def _compile_rpc(cls_name: str, fname: str, fn, opts: _RpcOptions,
         raise SchemaError(f"{ctx}: {e}") from None
     return RpcSchema(name=fname, app=app, request=tuple(req_fields),
                      reply=tuple(reply_fields), netfilter=nf,
-                     drain=opts.drain, device=device)
+                     drain=opts.drain, device=device,
+                     local_accum=local_accum)
 
 
 def compile_service(cls, *, default_app: str | None = None,

@@ -139,6 +139,46 @@ def fused_scatter_pallas(regs: jax.Array, idx: jax.Array, fvals: jax.Array,
     return out
 
 
+def _fused_fold_kernel(scale_ref, stack_ref, out_ref):
+    stack = stack_ref[...]
+    scale = scale_ref[0]
+
+    def body(i, acc):
+        return _sat_add_block(acc, _quantize_block(stack[i], scale))
+
+    acc0 = _quantize_block(stack[0], scale)
+    out_ref[...] = jax.lax.fori_loop(1, stack.shape[0], body, acc0)
+
+
+def fused_fold_pallas(fstack: jax.Array, scale: jax.Array, *,
+                      interpret: bool | None = None) -> jax.Array:
+    """fstack: fp32 (rounds, n) -> int32 (n,): quantize every round and
+    fold them with the switch's saturating add in ONE kernel launch — the
+    device lane of client-side local aggregation (``local_accum=N``).
+
+    Each round quantizes exactly like ``fused_addto_pallas`` would have,
+    and the rounds accumulate through ``_sat_add_block`` in round order,
+    so the folded update matches N separate switch addTo hops wherever no
+    intermediate sum saturates (the same fixed-point-range contract the
+    rest of the device lane carries)."""
+    r, n = fstack.shape
+    t0 = time.perf_counter() if _obs.METRICS else 0.0
+    out = pl.pallas_call(
+        _fused_fold_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        in_specs=[
+            pl.BlockSpec((1,), lambda: (0,)),
+            pl.BlockSpec((r, n), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda: (0,)),
+        interpret=resolve_interpret(interpret),
+    )(jnp.asarray(scale, jnp.float32).reshape(1),
+      fstack.astype(jnp.float32))
+    if _obs.METRICS:
+        _obs.kernel_launch("fused_fold", r * n, t0)
+    return out
+
+
 def _fused_read_kernel(start_ref, inv_ref, regs_ref, val_ref, mask_ref):
     n = val_ref.shape[0]
     q = regs_ref[pl.ds(start_ref[0], n)]

@@ -24,8 +24,8 @@ from repro.kernels.constants import (DEFAULT_BLOCK_ROWS, INT32_MAX,
 from repro.kernels.dequantize import dequantize_pallas
 from repro.kernels.flash_attn import (flash_attention_chunked_ref,
                                       flash_attention_pallas)
-from repro.kernels.fused_gpv import (fused_addto_pallas, fused_read_pallas,
-                                     fused_scatter_pallas)
+from repro.kernels.fused_gpv import (fused_addto_pallas, fused_fold_pallas,
+                                     fused_read_pallas, fused_scatter_pallas)
 from repro.kernels.inc_agg import sat_add_pallas
 from repro.kernels.pack_int8 import pack_int8_pallas, unpack_int8_pallas
 from repro.kernels.quantize import quantize_pallas
@@ -199,6 +199,40 @@ def fold_stream_host(logical: np.ndarray, vals: np.ndarray | None = None
         np.add.at(sums, inv, vals)
         sums = sums[order]
     return uniq[order], cnt[order].astype(np.int64), sums
+
+
+def fold_rounds(qrounds: list[np.ndarray]) -> np.ndarray:
+    """Fold N quantized addTo rounds into one switch-bound update: one
+    fused int64 reduction over the stacked rounds (client-side local
+    aggregation, ``Agg[...](local_accum=N)``).
+
+    Each round is already in the fixed-point integer domain (the per-round
+    ``rint(x*scale)`` of inc_map.quantize_stream), so the client-side sum
+    is EXACT — int64 cannot wrap on any realistic depth — and the single
+    saturating switch addTo at flush matches N sequential addTo hops
+    wherever no intermediate switch sum saturates (the same contract the
+    device lane documents).
+    """
+    if len(qrounds) == 1:
+        return np.asarray(qrounds[0], np.int64)
+    return np.add.reduce(np.stack([np.asarray(q, np.int64)
+                                   for q in qrounds]), axis=0)
+
+
+@jax.jit
+def _fused_fold_jit(fstack, scale):
+    return fused_fold_pallas(fstack, scale)
+
+
+def device_fold_rounds(frounds: list, scale) -> jax.Array:
+    """Quantize N fp32 addTo rounds and fold them in the int32 switch
+    domain in ONE fused kernel launch (kernels/fused_gpv.py) — the
+    ``device=True`` lane of ``local_accum``. Returns the folded int32
+    stream; agrees with :func:`fold_rounds` over host-quantized rounds
+    wherever no intermediate sum saturates."""
+    fstack = jnp.stack([jnp.asarray(f, jnp.float32).reshape(-1)
+                        for f in frounds])
+    return _fused_fold_jit(fstack, jnp.asarray(scale, jnp.float32))
 
 
 def _sat_add_scalar(a: int, b: int) -> int:

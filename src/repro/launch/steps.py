@@ -56,20 +56,30 @@ SEQ_SHARDED_BLOCKS = ("global", "moe", "selfcross")
 METRIC_PRECISION = 3
 
 
-def telemetry_service(app: str):
+def telemetry_service(app: str, local_accum: int = 1):
     """The loop's metric stream as an AsyncAgtr app: per-step scalars ride
     Map.addTo (summed in-network), monitors read them back with Map.get.
-    A typed schema class parameterized by AppName (one channel per loop)."""
-    @inc.service(app=app, name="Telemetry")
-    class Telemetry:
-        @inc.rpc(request_msg="MetricPush")
-        def PushMetrics(self, kvs: inc.Agg[inc.STRINTMap](
-                precision=METRIC_PRECISION)) -> {"msg": inc.Plain}: ...
+    A typed schema class parameterized by AppName (one channel per loop).
+    ``local_accum=N`` folds N pushes client-side into one switch-bound
+    update (metrics are latency-insensitive, the natural fold target).
+    Annotations are assigned explicitly: this module postpones
+    annotations, so a closure-parameterized spec inside a decorated class
+    body would not resolve."""
+    def PushMetrics(self, kvs): ...
+    PushMetrics.__annotations__ = {
+        "kvs": inc.Agg[inc.STRINTMap](precision=METRIC_PRECISION,
+                                      local_accum=local_accum),
+        "return": {"msg": inc.Plain}}
+    PushMetrics = inc.rpc(request_msg="MetricPush")(PushMetrics)
 
-        @inc.rpc(reply_msg="MetricReply")
-        def ReadMetrics(self, kvs: inc.ReadMostly[inc.STRINTMap](
-                precision=METRIC_PRECISION)): ...
-    return Telemetry
+    def ReadMetrics(self, kvs): ...
+    ReadMetrics.__annotations__ = {
+        "kvs": inc.ReadMostly[inc.STRINTMap](precision=METRIC_PRECISION)}
+    ReadMetrics = inc.rpc(reply_msg="MetricReply")(ReadMetrics)
+
+    cls = type("Telemetry", (), {"PushMetrics": PushMetrics,
+                                 "ReadMetrics": ReadMetrics})
+    return inc.service(app=app, name="Telemetry")(cls)
 
 
 # fixed-point digits for gradient elements on the device-resident grad
@@ -121,17 +131,23 @@ class TrainTelemetry:
 
     def __init__(self, runtime: IncRuntime | None = None, *,
                  n_workers: int = 1, quorum: float = 1.0,
-                 app_prefix: str = "train", grad_slots: int = 0):
+                 app_prefix: str = "train", grad_slots: int = 0,
+                 local_accum: int = 1):
         # telemetry is latency-insensitive: a generous time trigger lets
         # many steps' pushes coalesce into each drained batch (reads still
-        # see everything — the inline ReadMetrics call flushes first)
+        # see everything — the inline ReadMetrics call flushes first).
+        # local_accum=N goes further: N metric pushes fold client-side
+        # into ONE switch-bound update before they even join the queue
+        # (reads stay consistent — the promote-before-read barrier flushes
+        # open folds first).
         self.rt = runtime or IncRuntime(policy=DrainPolicy(
             max_batch=64, max_delay=0.25, eager_window=False))
         self._own_rt = runtime is None
         self.threshold = max(1, int(round(quorum * n_workers)))
         self.rt.server.register("CommitStep", self._on_commit)
         self.metrics = self.rt.make_stub(
-            telemetry_service(f"{app_prefix}-metrics"))
+            telemetry_service(f"{app_prefix}-metrics",
+                              local_accum=local_accum))
         self.agree = self.rt.make_stub(
             agreement_service(self.threshold, f"{app_prefix}-agree"))
         # device-resident gradient channel (opt-in by capacity): pushes

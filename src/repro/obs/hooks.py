@@ -91,6 +91,15 @@ def drain_trigger(app: str, trigger: str) -> None:
                               trigger=trigger).inc()
 
 
+def local_fold(app: str, depth: int) -> None:
+    """One local-aggregation flush (Agg[...](local_accum=N)): ``depth``
+    calls left the client as ONE switch-bound update, so depth-1 pipeline
+    traversals were saved."""
+    reg = _metrics.REGISTRY
+    reg.counter("inc_local_folds_total", app=app).inc(depth - 1)
+    reg.histogram("inc_local_fold_depth", buckets=_N, app=app).observe(depth)
+
+
 def kernel_launch(kernel: str, n: int, t0: float) -> None:
     """One fused Pallas kernel launch (kernels/fused_gpv.py). Wall time
     of the pallas_call invocation: dispatch latency when compiled,

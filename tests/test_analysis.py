@@ -369,6 +369,42 @@ def test_s1_quiet_when_all_options_handled():
     assert not findings(src, "S1")
 
 
+def test_s1_fires_on_surfaced_but_unhandled_local_accum():
+    """An _OPTIONS entry advertising ``local_accum`` without any code
+    mentioning it is exactly the drift S1 exists for: the option would
+    validate at the schema surface and then silently do nothing."""
+    src = """
+    class SchemaError(ValueError):
+        pass
+    class _FieldSpec:
+        _OPTIONS = {"agg": ("precision", "local_accum")}
+        def __call__(self, **kw):
+            if "precision" in kw:
+                pass
+            raise SchemaError("unknown")
+    """
+    assert [f.detail for f in findings(src, "S1")] == ["local_accum"]
+
+
+def test_s1_quiet_on_handled_local_accum():
+    """The real schema.py shape: ``local_accum`` surfaced in _OPTIONS and
+    handled by name in the option-validation body."""
+    src = """
+    class SchemaError(ValueError):
+        pass
+    class _FieldSpec:
+        _OPTIONS = {"agg": ("precision", "local_accum")}
+        def __call__(self, **kw):
+            if "precision" in kw:
+                pass
+            if "local_accum" in kw:
+                if int(kw["local_accum"]) < 1:
+                    raise SchemaError("local_accum must be >= 1")
+            raise SchemaError("unknown")
+    """
+    assert not findings(src, "S1")
+
+
 # ---------------------------------------------------------------------------
 # D1 — dead code
 
