@@ -2,7 +2,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast lint-plane examples bench-batch bench-accum \
-	bench-async bench-wire bench-shard bench-device bench-obs trace-shard
+	bench-async bench-wire bench-shard bench-device bench-obs \
+	bench-wire-proc trace-shard
 
 # full tier-1 suite (includes the slow multidevice subprocess tests)
 test:
@@ -56,6 +57,12 @@ bench-device:
 # hot path, plus end-to-end snapshot/trace export validation
 bench-obs:
 	python benchmarks/obs_overhead.py
+
+# multi-process wire plane vs in-process plane: switchd subprocess over a
+# Unix socket, chaos-exactness probe (hard gate) + throughput ratio at 64k
+# (gate: >= 0.8x of in-process) -> benchmarks/BENCH_wire_proc.json
+bench-wire-proc:
+	python benchmarks/wire_proc.py
 
 # one traced workers=4 window -> benchmarks/TRACE_multi_channel.json
 # (load in Perfetto / chrome://tracing)

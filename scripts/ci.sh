@@ -145,6 +145,35 @@ fi
 rm -f "$smoke_log"
 echo "agg_accum smoke: OK"
 
+# smoke the multi-process wire benchmark (tiny sizes; the chaos probe —
+# 5% loss/dup/reorder + one mid-run switchd SIGTERM + respawn-from-spool
+# — runs at full strength, so an exactly-once divergence fails CI here;
+# the throughput gate is only asserted on the committed full run)
+smoke_log=$(mktemp)
+if ! timeout 300 python -m benchmarks.wire_proc --smoke > "$smoke_log" 2>&1; then
+    echo "FAST LANE: FAIL (wire_proc smoke); output:"
+    cat "$smoke_log"
+    rm -f "$smoke_log"
+    exit 1
+fi
+rm -f "$smoke_log"
+echo "wire_proc smoke: OK"
+
+# wire quorum lane: a real switchd subprocess + 2 real client worker
+# subprocesses voting CntFwd through a 5% lossy proxy, with one mid-run
+# daemon restart-from-spool. The orchestrator verifies votes, grads
+# (element-exact vs a recomputed oracle), commit count, and zero
+# duplicate effects — any divergence exits non-zero.
+smoke_log=$(mktemp)
+if ! timeout 300 python -m repro.launch.elastic --wire-quorum --wire-loss 0.05 > "$smoke_log" 2>&1; then
+    echo "FAST LANE: FAIL (wire quorum); output:"
+    cat "$smoke_log"
+    rm -f "$smoke_log"
+    exit 1
+fi
+rm -f "$smoke_log"
+echo "wire quorum: OK"
+
 # obs lane: the exports users consume must hold their published shapes —
 # a live traced runtime's metrics_snapshot() validates against the
 # checked-in scripts/obs_schema.json and the Chrome trace JSON validates
@@ -211,14 +240,15 @@ for f in files:
     for key in ("bench", "config", "rows", "acceptance"):
         assert key in d, f"{f}: missing {key!r}"
     assert isinstance(d["rows"], list) and d["rows"], f"{f}: empty rows"
-for name in ("async_latency", "wire_path", "multi_channel", "device_path",
-             "obs_overhead", "agg_accum"):
+smoked = ("async_latency", "wire_path", "multi_channel", "device_path",
+          "obs_overhead", "agg_accum", "wire_proc")
+for name in smoked:
     f = pathlib.Path(f"benchmarks/BENCH_smoke_{name}.json")
     assert f.exists(), f"{f}: the smoked bench exported nothing"
     assert f.stat().st_mtime >= stamp, \
         f"{f}: stale — this lane's smoke did not rewrite it"
 print(f"bench trajectory: {len(files)} BENCH_*.json parse OK, "
-      f"6 smoke exports fresh")
+      f"{len(smoked)} smoke exports fresh")
 EOF
 then
     echo "FAST LANE: FAIL (BENCH_*.json export)"

@@ -295,6 +295,38 @@ class SwitchMemory:
             if part and part[0] + part[1] == self._next_free:
                 self._next_free = part[0]
 
+    def state_dict(self) -> dict:
+        """Portable snapshot of the whole register file + partition table
+        (numpy regs, host layout). The switch daemon (repro.net) spools
+        this across graceful restarts so flip-bit replay stays idempotent
+        over a process boundary."""
+        with self._alloc_lock:
+            partitions = dict(self.partitions)
+            next_free = self._next_free
+        regs = []
+        for seg in self.segments:
+            with seg.lock:
+                regs.append(np.asarray(seg.regs, np.int32).copy())
+        return {"partitions": partitions, "next_free": next_free,
+                "regs": regs, "n_segments": self.n_segments,
+                "seg_slots": self.seg_slots}
+
+    def load_state(self, state: dict) -> None:
+        """Restore a ``state_dict()`` snapshot (host-resident layout)."""
+        if (state["n_segments"] != self.n_segments
+                or state["seg_slots"] != self.seg_slots):
+            raise ValueError(
+                f"switch geometry mismatch: spool is "
+                f"{state['n_segments']}x{state['seg_slots']}, this switch "
+                f"is {self.n_segments}x{self.seg_slots}")
+        with self._alloc_lock:
+            self.partitions.clear()
+            self.partitions.update(state["partitions"])
+            self._next_free = state["next_free"]
+        for seg, regs in zip(self.segments, state["regs"]):
+            with seg.lock:
+                seg.regs = np.array(regs, np.int32)
+
     def occupancy(self) -> list[dict]:
         """Per-Segment allocation snapshot for the observability exports
         (scheduling_report's ``"__switch__"`` section): how many of each
@@ -347,6 +379,32 @@ class SwitchMemory:
                     seg.regs = ops.sparse_addto_bucketed(
                         seg.regs, np.asarray(off[m], np.int32),
                         np.asarray(vals[m], np.int32))
+
+    def addto_dense(self, start: int, vals: np.ndarray) -> None:
+        """Saturating add of a contiguous physical run — result-identical
+        to ``addto(arange(start, start+len(vals)), vals)`` but without the
+        address array: per-segment slice arithmetic on host segments. The
+        switch daemon's dense GPV wire path calls this (clients elide the
+        8-byte-per-slot address array for contiguous ranges)."""
+        n = len(vals)
+        pos = 0
+        while pos < n:
+            s, off = divmod(start + pos, self.seg_slots)
+            take = min(n - pos, self.seg_slots - off)
+            seg = self.segments[s]
+            v = np.asarray(vals[pos:pos + take], np.int32)
+            with seg.lock:
+                if (not seg.device and isinstance(seg.regs, np.ndarray)
+                        and seg.regs.flags.writeable):
+                    seg.regs = ops.dense_addto_host(seg.regs, off, v)
+                else:       # device or jnp-backed segment: scatter lane
+                    idx = np.arange(off, off + take, dtype=np.int32)
+                    if seg.device:
+                        seg.regs = ops.device_addto_int(seg.regs, idx, v)
+                    else:
+                        seg.regs = ops.sparse_addto_bucketed(seg.regs,
+                                                             idx, v)
+            pos += take
 
     def addto_f32(self, phys: np.ndarray, fvals: np.ndarray, scale) -> None:
         """Fused quantize + saturating scatter-add of an fp32 update

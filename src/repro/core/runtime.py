@@ -587,6 +587,13 @@ class IncRuntime(NetRPC):
                 "pick_contention": self._pick_contention,
             }
         out["__switch__"] = self._switch_report()
+        # real-wire deployments (Controller(switch=RemoteSwitchMemory(...)))
+        # carry the transport's failure story — reconnects, retx, AIMD cw,
+        # and whether the channel degraded to the host-side fallback plane.
+        # Duck-typed so repro.core never imports repro.net.
+        sw = self.controller.switch
+        if hasattr(sw, "fallback_active") and hasattr(sw, "report"):
+            out["__wire__"] = sw.report()
         return out
 
     def _channel_entry(self, gaid: int, q: _ChannelQueue) -> dict:
@@ -679,7 +686,8 @@ class IncRuntime(NetRPC):
         rep = self.scheduling_report()
         plane = rep.pop("__plane__")
         switch = rep.pop("__switch__")
-        return {
+        wire = rep.pop("__wire__", None)
+        snap = {
             "schema": _metrics.SCHEMA_VERSION,
             "enabled": _obs.METRICS,
             "channels": rep,
@@ -687,6 +695,9 @@ class IncRuntime(NetRPC):
             "switch": switch,
             "metrics": _metrics.REGISTRY.snapshot(),
         }
+        if wire is not None:
+            snap["wire"] = wire
+        return snap
 
     # -- scheduler internals -------------------------------------------------
 

@@ -120,18 +120,33 @@ class ClientFlow:
     The invariant backing the §5.1 induction proof: packet i of window t is
     sent only after packet i of window t-1 is ACKed — guaranteed because
     seq s may be in flight only when s - w_max is ACKed (cumulative window).
+
+    Retransmission is timer-driven: each in-flight seq carries its own RTO
+    deadline with exponential backoff and jitter, and ``retransmissions()``
+    only emits the seqs whose deadline has passed. The clock is virtual by
+    default (one tick per ``retransmissions()`` call — the simulator's
+    round) and real when the caller passes ``now`` (the wire transport
+    passes ``time.monotonic()``).
     """
 
+    RTO_MAX_DOUBLINGS = 6   # backoff cap: rto_base * 2**6
+
     def __init__(self, flow_id: int, n_packets: int,
-                 w_max: int = W_MAX_DEFAULT, rng: random.Random | None = None):
+                 w_max: int = W_MAX_DEFAULT, rng: random.Random | None = None,
+                 rto_base: float = 1.0, rto_jitter: float = 0.5):
         self.flow = flow_id
         self.n = n_packets
         self.w_max = w_max
         self.next_seq = 0
         self.acked: set[int] = set()
         self.in_flight: dict[int, int] = {}   # seq -> retx count
+        self.deadline: dict[int, float] = {}  # seq -> RTO expiry
         self.aimd = AimdState(cw_max=w_max)
         self.rng = rng or random.Random(0)
+        self.rto_base = rto_base
+        self.rto_jitter = rto_jitter
+        self.clock = 0.0
+        self.base = 0        # cumulative-ack window base, kept incrementally
         self.sent_total = 0
         self.retx_total = 0
 
@@ -140,29 +155,48 @@ class ClientFlow:
         return len(self.acked) == self.n
 
     def _window_base(self) -> int:
-        b = 0
-        while b in self.acked:
-            b += 1
-        return b
+        return self.base
+
+    def _arm(self, seq: int, now: float) -> None:
+        backoff = min(self.in_flight[seq], self.RTO_MAX_DOUBLINGS)
+        rto = self.rto_base * (1 << backoff)
+        self.deadline[seq] = now + rto + self.rng.random() * \
+            self.rto_jitter * rto
 
     def sendable(self) -> list[Packet]:
         """Fresh packets permitted by min(cw, w_max) from the window base."""
         out = []
-        base = self._window_base()
-        limit = base + min(self.aimd.cw, self.w_max)
+        limit = self.base + min(self.aimd.cw, self.w_max)
         while self.next_seq < min(limit, self.n):
             s = self.next_seq
             out.append(Packet(self.flow, s, flip_of(s, self.w_max)))
             self.in_flight[s] = 0
+            self._arm(s, self.clock)
             self.next_seq += 1
             self.sent_total += 1
         return out
 
-    def retransmissions(self) -> list[Packet]:
+    def next_deadline(self) -> float | None:
+        """Earliest in-flight RTO expiry, or None when nothing is in
+        flight (the wire transport sleeps until this)."""
+        return min(self.deadline.values()) if self.deadline else None
+
+    def retransmissions(self, now: float | None = None) -> list[Packet]:
+        """Seqs whose RTO has expired, with backoff re-armed. With no
+        ``now`` the virtual clock advances one tick per call (simulator
+        round); with ``now`` the caller owns the clock."""
+        if now is None:
+            self.clock += 1.0
+            now = self.clock
+        else:
+            self.clock = max(self.clock, now)
         out = []
         for s in sorted(self.in_flight):
+            if self.deadline.get(s, 0.0) > now:
+                continue
             self.in_flight[s] += 1
             self.retx_total += 1
+            self._arm(s, now)
             out.append(Packet(self.flow, s, flip_of(s, self.w_max),
                               is_retx=True))
         return out
@@ -172,6 +206,18 @@ class ClientFlow:
             return
         self.acked.add(seq)
         self.in_flight.pop(seq, None)
+        self.deadline.pop(seq, None)
+        while self.base in self.acked:
+            self.base += 1
+        # fast retransmit: an ACK above an in-flight hole is evidence the
+        # hole was lost (or its ACK was) — pull its deadline down to one
+        # base RTO instead of waiting out the exponential backoff, which
+        # otherwise head-of-line-blocks the window for seconds
+        for s in self.in_flight:
+            if s < seq:
+                d = self.clock + self.rto_base
+                if self.deadline.get(s, d) > d:
+                    self.deadline[s] = d
         self.aimd.on_ack(ecn)
 
 

@@ -251,6 +251,27 @@ def _sat_add_scalar(a: int, b: int) -> int:
     return s
 
 
+def dense_addto_host(regs: np.ndarray, start: int,
+                     val: np.ndarray) -> np.ndarray:
+    """Saturating add of a contiguous update run — result-identical to
+    ``sparse_addto_host(regs, arange(start, start+len(val)), val)`` (the
+    strictly-increasing branch: one update per slot, so sequential order
+    is vacuous), but slice arithmetic instead of fancy gather/scatter.
+    MUTATES ``regs`` in place and returns it. The switch daemon's dense
+    GPV path (repro.net) lands here."""
+    n = len(val)
+    if n == 0:
+        return regs
+    cur = regs[start:start + n].astype(np.int64)
+    val = np.asarray(val, np.int64)
+    safe = np.abs(cur) + np.abs(val) <= SAT_MAX
+    new = cur + np.where(safe, val, 0)
+    for i in np.nonzero(~safe)[0]:
+        new[i] = _sat_add_scalar(int(cur[i]), int(val[i]))
+    regs[start:start + n] = new.astype(np.int32)
+    return regs
+
+
 def sparse_addto_host(regs: np.ndarray, idx: np.ndarray,
                       val: np.ndarray) -> np.ndarray:
     """Numpy sparse_addto, result-identical to ref.sparse_addto; MUTATES

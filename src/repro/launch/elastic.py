@@ -15,22 +15,37 @@ the framework's answers, all on host devices:
   elastic resize         ZeRO chunks re-sliced for a different dp size on
                          restore (checkpoint/store.resize_chunks).
 
+  real-wire quorum       CntFwd votes cast by *real client subprocesses*
+                         over the loopback switch daemon (repro.net), with
+                         packet loss injected and the daemon SIGTERM'd and
+                         respawned mid-run — the same straggler/commit
+                         contract, but across genuine process and socket
+                         boundaries (``--wire-quorum``).
+
     PYTHONPATH=src python -m repro.launch.elastic --arch qwen2.5-3b \
         --steps 40 --kill-at 20
+    PYTHONPATH=src python -m repro.launch.elastic --wire-quorum
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.agreement import elastic_mean, quorum_commit, quorum_count
-from repro import compat
-from repro.launch.train import train_loop
+# Geometry shared by the daemon and every client mirror in the
+# wire-quorum demo (RESERVE replies carry it; a mismatch is an error).
+_WIRE_SEGMENTS = 4
+_WIRE_SEG_SLOTS = 2048
+_VOTE_GAID = 101                   # per-step CntFwd vote counters
+_GRAD_GAID = 102                   # shared gradient accumulator
 
 
 def run(arch: str, steps_n: int, kill_at: int, ckpt_dir: str) -> dict:
+    from repro.launch.train import train_loop
     # phase 1: train until the simulated preemption
     print(f"=== phase 1: train to step {kill_at}, then 'preempt' ===")
     out1 = train_loop(arch=arch, inc_mode="netrpc", steps_n=kill_at,
@@ -49,6 +64,12 @@ def run(arch: str, steps_n: int, kill_at: int, ckpt_dir: str) -> dict:
 
 def quorum_demo(n_dp: int = 8, quorum: float = 0.75) -> None:
     """Straggler mitigation on host devices: drop workers, commit anyway."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.agreement import elastic_mean, quorum_commit, quorum_count
+    from repro import compat
+
     mesh = compat.make_mesh((len(jax.devices()),), ("data",))
 
     def step(contrib, grads):
@@ -74,13 +95,242 @@ def quorum_demo(n_dp: int = 8, quorum: float = 0.75) -> None:
               f"commit={bool(commit[0])} elastic_mean={float(mean[0]):.3f}")
 
 
+def _worker_grads(worker_id: int, steps: int, grad_slots: int):
+    """Deterministic per-(worker, step) gradient contributions, so the
+    orchestrator can recompute the expected switch state without IPC."""
+    import numpy as np
+    rng = np.random.default_rng(1000 + worker_id)
+    return [rng.integers(-100, 100, size=grad_slots).astype(np.int32)
+            for _ in range(steps)]
+
+
+def wire_worker(addr: str, worker_id: int, n_workers: int, steps: int,
+                grad_slots: int, quorum: float) -> None:
+    """One data-plane client process: contribute gradients and cast a
+    CntFwd vote per step over the real wire, printing a HALF marker (the
+    orchestrator restarts the daemon on it) and a DONE line with the
+    observed commits."""
+    import numpy as np
+
+    from repro.net import RemoteSwitchMemory, WireTransport
+
+    host, _, port = addr.rpartition(":")
+    # workers must ride out the planned daemon restart (a cold python +
+    # jax respawn), so the degradation threshold sits well above it
+    t = WireTransport((host, int(port)), flow_id=10 + worker_id, w_max=8,
+                      rto_base=0.05, call_timeout=120.0,
+                      unreachable_after=120.0)
+    mem = RemoteSwitchMemory(t, n_segments=_WIRE_SEGMENTS,
+                             seg_slots=_WIRE_SEG_SLOTS)
+    try:
+        assert mem.reserve(_VOTE_GAID, steps)
+        assert mem.reserve(_GRAD_GAID, grad_slots)
+        vstart = mem.partitions[_VOTE_GAID][0]
+        gstart = mem.partitions[_GRAD_GAID][0]
+        gphys = gstart + np.arange(grad_slots, dtype=np.int64)
+        threshold = max(1, int(round(quorum * n_workers)))
+        commits = []
+        for s, vals in enumerate(_worker_grads(worker_id, steps,
+                                               grad_slots)):
+            mem.addto(gphys, vals)
+            mem.addto(np.array([vstart + s], np.int64),
+                      np.array([1], np.int32))          # the CntFwd vote
+            cnt = int(mem.get(np.array([vstart + s], np.int64))[0])
+            commits.append(cnt >= threshold)
+            if s == max(0, steps // 2 - 1):
+                print(f"WIREWORKER {worker_id} HALF", flush=True)
+        rep = t.report()
+        print("WIREWORKER %d DONE %s" % (worker_id, json.dumps(
+            {"commits": commits,
+             "retx": rep["retx"], "reconnects": rep["reconnects"],
+             "degraded": rep["degraded"]})), flush=True)
+    finally:
+        t.close()
+
+
+def _child_env() -> dict:
+    """Environment for spawned daemon/worker processes: make sure the
+    ``repro`` package the orchestrator imported is importable there too."""
+    import repro
+    env = dict(os.environ)
+    src = os.path.dirname(list(repro.__path__)[0])
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _spawn_switchd(uds: str, spool: str) -> subprocess.Popen:
+    p = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.switchd", "--uds", uds,
+         "--segments", str(_WIRE_SEGMENTS), "--slots",
+         str(_WIRE_SEG_SLOTS), "--state-spool", spool, "--track-effects"],
+        stdout=subprocess.PIPE, text=True, env=_child_env())
+    line = p.stdout.readline()
+    if "SWITCHD READY" not in line:
+        p.kill()
+        raise RuntimeError(f"switchd failed to start: {line!r}")
+    return p
+
+
+def wire_quorum(n_workers: int = 2, steps: int = 6, grad_slots: int = 64,
+                loss: float = 0.05, restart: bool = True,
+                quorum: float = 1.0, workdir: str = "/tmp") -> dict:
+    """CntFwd quorum across real subprocesses: a switch daemon, a lossy
+    proxy, and ``n_workers`` client processes voting per step. Midway,
+    SIGTERM the daemon and respawn it from its state spool; every vote
+    and gradient element must still land exactly once."""
+    import numpy as np
+
+    from repro.net import FaultProxy, FaultSpec, RemoteSwitchMemory, \
+        WireTransport
+
+    uds = os.path.join(workdir, f"repro_wirequorum_{os.getpid()}.sock")
+    spool = os.path.join(workdir, f"repro_wirequorum_{os.getpid()}.pkl")
+    for path in (uds, spool):
+        if os.path.exists(path):
+            os.unlink(path)
+    daemon = _spawn_switchd(uds, spool)
+    proxy = FaultProxy(uds, FaultSpec(seed=11, loss=loss, dup=loss / 2,
+                                      reorder=loss / 2)).start()
+    addr = f"{proxy.address[0]}:{proxy.address[1]}"
+
+    env = _child_env()
+    halves = [threading.Event() for _ in range(n_workers)]
+    outputs: list[list[str]] = [[] for _ in range(n_workers)]
+
+    def _drain(ix: int, pipe) -> None:
+        for line in pipe:
+            line = line.strip()
+            outputs[ix].append(line)
+            if line.endswith("HALF"):
+                halves[ix].set()
+
+    workers, drains = [], []
+    try:
+        for k in range(n_workers):
+            w = subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.elastic",
+                 "--wire-worker", "--addr", addr, "--worker-id", str(k),
+                 "--n-workers", str(n_workers), "--wire-steps", str(steps),
+                 "--grad-slots", str(grad_slots), "--quorum", str(quorum)],
+                stdout=subprocess.PIPE, text=True, env=env)
+            th = threading.Thread(target=_drain, args=(k, w.stdout),
+                                  daemon=True)
+            th.start()
+            workers.append(w)
+            drains.append(th)
+
+        if restart:
+            for ev in halves:
+                if not ev.wait(timeout=120):
+                    raise RuntimeError("worker never reached HALF")
+            daemon.send_signal(signal.SIGTERM)
+            daemon.wait(timeout=30)
+            daemon = _spawn_switchd(uds, spool)
+            print("=== switch daemon restarted mid-run ===")
+
+        for w in workers:
+            if w.wait(timeout=300) != 0:
+                raise RuntimeError(f"wire worker exited rc={w.returncode}")
+        for th in drains:
+            th.join(timeout=10)
+
+        # verify against a clean (fault-free) read of the daemon state
+        t = WireTransport(uds, flow_id=99, w_max=8, call_timeout=30.0)
+        mem = RemoteSwitchMemory(t, n_segments=_WIRE_SEGMENTS,
+                                 seg_slots=_WIRE_SEG_SLOTS)
+        try:
+            assert mem.reserve(_VOTE_GAID, steps)
+            assert mem.reserve(_GRAD_GAID, grad_slots)
+            vstart = mem.partitions[_VOTE_GAID][0]
+            gstart = mem.partitions[_GRAD_GAID][0]
+            votes = mem.get(vstart + np.arange(steps, dtype=np.int64))
+            grads = mem.get(gstart + np.arange(grad_slots, dtype=np.int64))
+            stats = t.ctrl("stats")
+        finally:
+            t.close()
+
+        expect = np.zeros(grad_slots, dtype=np.int64)
+        for k in range(n_workers):
+            for vals in _worker_grads(k, steps, grad_slots):
+                expect += vals
+        done = [json.loads(line.split("DONE ", 1)[1])
+                for out in outputs for line in out if " DONE " in line]
+        committed = [any(d["commits"][s] for d in done)
+                     for s in range(steps)]
+        result = {
+            "votes": votes.tolist(),
+            "votes_exact": bool((votes == n_workers).all()),
+            "grads_exact": bool(
+                (grads.astype(np.int64) == expect).all()),
+            "steps_committed": sum(committed),
+            "steps": steps,
+            "duplicate_effects": stats["duplicate_effects"],
+            "worker_retx": [d["retx"] for d in done],
+            "worker_reconnects": [d["reconnects"] for d in done],
+        }
+        print(f"wire quorum: votes={result['votes']} "
+              f"exact={result['votes_exact']}/{result['grads_exact']} "
+              f"committed={result['steps_committed']}/{steps} "
+              f"dupes={result['duplicate_effects']}")
+        if not (result["votes_exact"] and result["grads_exact"]):
+            raise RuntimeError(f"wire quorum state diverged: {result}")
+        if result["steps_committed"] != steps:
+            raise RuntimeError(f"quorum never committed: {result}")
+        if result["duplicate_effects"]:
+            raise RuntimeError(
+                f"double-applied effects: {result['duplicate_effects']}")
+        return result
+    finally:
+        for w in workers:
+            if w.poll() is None:
+                w.kill()
+        proxy.stop()
+        if daemon.poll() is None:
+            daemon.send_signal(signal.SIGTERM)
+            try:
+                daemon.wait(timeout=15)
+            except subprocess.TimeoutExpired:
+                daemon.kill()
+        for path in (uds, spool):
+            if os.path.exists(path):
+                os.unlink(path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--kill-at", type=int, default=20)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_elastic_ckpt")
+    ap.add_argument("--wire-quorum", action="store_true",
+                    help="run the real-subprocess CntFwd quorum demo "
+                         "instead of the training demo")
+    ap.add_argument("--wire-workers", type=int, default=2)
+    ap.add_argument("--wire-steps", type=int, default=6)
+    ap.add_argument("--wire-loss", type=float, default=0.05)
+    ap.add_argument("--no-restart", action="store_true",
+                    help="skip the mid-run daemon restart")
+    ap.add_argument("--quorum", type=float, default=1.0)
+    # internal: worker mode (spawned by wire_quorum)
+    ap.add_argument("--wire-worker", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--addr", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--worker-id", type=int, default=0,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--n-workers", type=int, default=2,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--grad-slots", type=int, default=64,
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.wire_worker:
+        wire_worker(args.addr, args.worker_id, args.n_workers,
+                    args.wire_steps, args.grad_slots, args.quorum)
+        return
+    if args.wire_quorum:
+        wire_quorum(n_workers=args.wire_workers, steps=args.wire_steps,
+                    loss=args.wire_loss, restart=not args.no_restart,
+                    quorum=args.quorum)
+        return
     run(args.arch, args.steps, args.kill_at, args.ckpt_dir)
     quorum_demo()
 

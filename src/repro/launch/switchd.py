@@ -1,0 +1,82 @@
+"""The switch daemon as a process: ``python -m repro.launch.switchd``.
+
+Runs one ``repro.net.SwitchServer`` in the foreground and prints a
+single machine-readable READY line so launchers can scrape the bound
+address::
+
+    SWITCHD READY {"host": "127.0.0.1", "port": 41623}
+    SWITCHD READY {"uds": "/tmp/switchd.sock"}
+
+SIGTERM/SIGINT trigger a graceful shutdown: the register file and the
+per-flow idempotency arrays are spooled to ``--state-spool`` (when set)
+before exit, and a respawned daemon pointed at the same spool resumes
+with identical state — clients reconnect and replay their in-flight
+window without a single double-applied addTo. This SIGTERM+respawn
+cycle is exactly the "switch restart" fault the CI wire lane injects
+(see scripts/ci.sh and launch/elastic.py --wire-quorum).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import signal
+import threading
+
+from repro.core.transport import W_MAX_DEFAULT
+from repro.net import SwitchServer
+from repro.net.protocol import MTU_DEFAULT
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.switchd",
+        description="NetRPC switch daemon (real-wire data plane)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="TCP port (0 = ephemeral; scrape the READY line)")
+    ap.add_argument("--uds", default=None,
+                    help="Unix socket path (overrides --host/--port)")
+    ap.add_argument("--w-max", type=int, default=W_MAX_DEFAULT)
+    ap.add_argument("--mtu", type=int, default=MTU_DEFAULT)
+    ap.add_argument("--segments", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=40_000,
+                    help="slots per segment")
+    ap.add_argument("--ecn-threshold", type=int, default=48)
+    ap.add_argument("--state-spool", default=None,
+                    help="pickle path: loaded on start if present, "
+                         "written on graceful shutdown")
+    ap.add_argument("--track-effects", action="store_true",
+                    help="count per-(flow,seq) side-effect applications "
+                         "(test/CI mode: proves exactly-once)")
+    args = ap.parse_args(argv)
+
+    srv = SwitchServer(host=args.host, port=args.port, uds_path=args.uds,
+                       w_max=args.w_max, mtu=args.mtu,
+                       n_segments=args.segments, seg_slots=args.slots,
+                       ecn_threshold=args.ecn_threshold,
+                       state_spool=args.state_spool,
+                       track_effects=args.track_effects)
+    done = threading.Event()
+
+    def _term(signum, frame):
+        done.set()
+
+    signal.signal(signal.SIGTERM, _term)
+    signal.signal(signal.SIGINT, _term)
+
+    srv.start()
+    if isinstance(srv.address, str):
+        ready = {"uds": srv.address}
+    else:
+        ready = {"host": srv.address[0], "port": srv.address[1]}
+    print(f"SWITCHD READY {json.dumps(ready)}", flush=True)
+    try:
+        done.wait()
+    finally:
+        srv.stop(spool=True)
+        print(f"SWITCHD STOPPED {json.dumps(srv.stats)}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

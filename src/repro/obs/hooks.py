@@ -115,3 +115,34 @@ def switch_op(op: str, n: int, t0_us: float) -> None:
     """Switch addto/read span on the active trace context (no-op when the
     batch was not sampled)."""
     _trace.phase(f"switch_{op}", t0_us, n=n)
+
+
+# -- real-wire transport (repro.net) -----------------------------------------
+
+def wire_retx(flow: int, rto_s: float) -> None:
+    """One RTO-driven retransmission on the real wire; ``rto_s`` is the
+    backed-off timeout that just fired (the backoff histogram)."""
+    reg = _metrics.REGISTRY
+    reg.counter("net_retx_total", flow=str(flow)).inc()
+    reg.histogram("net_rto_backoff_us", buckets=_US,
+                  flow=str(flow)).observe(rto_s * 1e6)
+
+
+def wire_ack(flow: int, cw: int, ecn: bool) -> None:
+    """One real-wire ACK: AIMD cw gauge + ECN mark counter per flow."""
+    reg = _metrics.REGISTRY
+    reg.gauge("net_aimd_cw", flow=str(flow)).set(cw)
+    reg.counter("net_acks_total", flow=str(flow)).inc()
+    if ecn:
+        reg.counter("net_ecn_marks_total", flow=str(flow)).inc()
+
+
+def wire_reconnect(flow: int) -> None:
+    _metrics.REGISTRY.counter("net_reconnects_total", flow=str(flow)).inc()
+
+
+def wire_fallback(flow: int) -> None:
+    """The channel gave up on the switch and fell back to the host-side
+    execution path (graceful degradation)."""
+    _metrics.REGISTRY.counter("net_fallback_activations_total",
+                              flow=str(flow)).inc()

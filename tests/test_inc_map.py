@@ -89,6 +89,22 @@ def test_retrieve_all_moves_registers_to_host():
     assert srv.read(1) == 5 and srv.read(2) == 6
 
 
+def test_addto_dense_matches_sparse_addto():
+    """The dense-run verb (wire fast path) is result-identical to the
+    general scatter-add — including segment-spanning runs and saturation."""
+    rng = np.random.default_rng(7)
+    for start, n in ((0, 16), (50, 40), (100, 28), (63, 2)):
+        a = SwitchMemory(n_segments=2, seg_slots=64)
+        b = SwitchMemory(n_segments=2, seg_slots=64)
+        phys = np.arange(start, start + n, dtype=np.int64)
+        for vals in (rng.integers(-999, 999, size=n).astype(np.int32),
+                     np.full(n, 2_000_000_000, np.int32),
+                     np.full(n, 2_000_000_000, np.int32)):   # forces sat
+            a.addto(phys, vals)
+            b.addto_dense(start, vals)
+        assert np.array_equal(a.get(phys), b.get(phys)), (start, n)
+
+
 def test_fcfs_partition_reservation():
     sw = SwitchMemory(n_segments=2, seg_slots=64)
     assert sw.reserve(1, 100)
